@@ -1,0 +1,50 @@
+"""Aggregator micro-benchmark (the paper has no timing table; this is
+the systems-side cost table for EXPERIMENTS.md): wall time per call for
+each aggregator over (K, M), plus the Pallas kernel (interpret on CPU).
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import aggregators
+from repro.kernels import ops
+
+SHAPES = ((16, 1 << 16), (32, 1 << 18))
+AGGS = ("mean", "median", "trimmed_mean", "geometric_median", "krum",
+        "m_huber", "mm_tukey")
+
+
+def _time(fn, *args, reps=5):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def main() -> list[tuple]:
+    rows = []
+    for k, m in SHAPES:
+        x = jax.random.normal(jax.random.key(0), (k, m))
+        x = x.at[-k // 4:].add(100.0)
+        for name in AGGS:
+            kw = {"num_malicious": k // 4} if name == "krum" else {}
+            agg = aggregators.get_aggregator(name, **kw)
+            f = jax.jit(lambda v, a=agg: a(v, None))
+            us = _time(f, x)
+            # derived: throughput in M coords / s
+            rows.append((f"agg/{name}/K{k}_M{m}", us, m / us))
+        f = jax.jit(lambda v: ops.mm_aggregate(v, interpret=True))
+        us = _time(f, x)
+        rows.append((f"agg/mm_pallas_interp/K{k}_M{m}", us, m / us))
+    return rows
+
+
+if __name__ == "__main__":
+    for name, us, derived in main():
+        print(f"{name},{us:.2f},{derived:.6g}")

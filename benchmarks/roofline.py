@@ -1,0 +1,218 @@
+"""Roofline analysis per (arch x shape x mesh).
+
+Three terms, in seconds per step, on TPU v5e constants:
+
+  compute    = FLOPs_per_device / 197e12          (bf16 MXU peak)
+  memory     = HBM_bytes_per_device / 819e9
+  collective = collective_bytes_per_device / 50e9 (per-link ICI)
+
+FLOPs / bytes / collective traffic come from an *analytic* model of the
+lowered step (documented below), cross-checked against the dry-run
+artifact: `memory_analysis()` is authoritative for fits-in-HBM, and the
+HLO text confirms which collective kinds appear.  We do NOT use raw
+`cost_analysis()` flops as the primary number because XLA counts while
+-loop (scan) bodies once (verified experimentally; see EXPERIMENTS.md
+§Dry-run), which undercounts scanned layer stacks by ~L.
+
+Analytic model (per device, per step):
+  train:   FLOPs = (6*N_active*T + 12*L_attn*T*S_ctx*H*hd*0.5) / chips
+  prefill: FLOPs = (2*N_active*T +  4*L_attn*T*S_ctx*H*hd*0.5) / chips
+  decode:  FLOPs = (2*N_active*B +  4*L_attn*B*S_cache*H*hd) / chips
+  HBM:     params_local * passes + act_local (train)
+           params_local + cache_local (decode/prefill)
+  ICI:     TP activation all-reduces + DP aggregation traffic
+           (mean/rs_mm ~ 2*G*(K-1)/K, gather_mm ~ K*G_modelshard;
+            fsdp adds 2*P*(K-1)/K param gathers), G = grad bytes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import glob
+import json
+import os
+
+from repro import configs
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+CHIPS = 256
+
+
+@dataclasses.dataclass
+class Terms:
+    compute: float
+    memory: float
+    collective: float
+    model_flops: float          # 6*N_active*D (train) / 2*N_active*B (decode)
+    hlo_flops: float | None     # raw cost_analysis (loop bodies counted once)
+    dominant: str
+    note: str
+
+    @property
+    def total(self) -> float:
+        return max(self.compute, self.memory, self.collective)
+
+
+def _attn_dims(m):
+    if m.arch_type == "ssm":
+        return 0, 0, 0
+    l_attn = m.num_layers // m.attn_every if m.arch_type == "hybrid" \
+        else m.num_layers + m.encoder_layers
+    return l_attn, m.num_heads, m.head_dim
+
+
+def analytic_terms(arch_id: str, shape_name: str,
+                   aggregation: str | None = None,
+                   rec: dict | None = None) -> Terms:
+    arch = configs.load_arch(arch_id)
+    shape = configs.INPUT_SHAPES[shape_name]
+    m = configs.model_for_shape(arch.model, shape)
+    par = arch.parallel_for(shape_name)
+    agg = aggregation or par.aggregation
+    k_agents = 16
+    model_shard = 16
+    n_act = m.active_param_count()
+    n_tot = m.param_count()
+    gb, s = shape.global_batch, shape.seq_len
+    l_attn, h, hd = _attn_dims(m)
+    s_ctx = min(s, m.sliding_window) if m.sliding_window else s
+    act_b = 2 if m.act_dtype == "bfloat16" else 4
+
+    if shape.kind == "train":
+        t = gb * s
+        flops = 6 * n_act * t + 12 * l_attn * t * s_ctx * h * hd * 0.5
+        # params: fwd read + bwd read + grad write + adam m,v rw + param rw
+        p_local = n_tot * 4 / (CHIPS if par.fsdp else model_shard)
+        act_local = t / k_agents * m.d_model * max(m.num_layers, 1) \
+            * 14 * act_b / model_shard
+        hbm = p_local * 9 + act_local
+        grad_bytes = n_tot * 4 / model_shard     # f32 grads, model-sharded
+        tp = 4 * m.num_layers * (t / k_agents) * m.d_model * act_b / model_shard
+        if agg == "gather_mm":
+            dp = k_agents * grad_bytes
+        else:  # mean / rs_mm: all-reduce-equivalent traffic
+            dp = 2 * grad_bytes * (k_agents - 1) / k_agents
+        fsdp_gather = 2 * n_tot * 4 * (k_agents - 1) / k_agents / model_shard \
+            if par.fsdp else 0.0
+        ici = tp + dp + fsdp_gather
+    elif shape.kind == "prefill":
+        t = gb * s
+        flops = 2 * n_act * t + 4 * l_attn * t * s_ctx * h * hd * 0.5
+        p_local = n_tot * 2 / (CHIPS if par.fsdp else model_shard)
+        act_local = t / k_agents * m.d_model * max(m.num_layers, 1) \
+            * 6 * act_b / model_shard
+        hbm = p_local + act_local
+        tp = 2 * m.num_layers * (t / k_agents) * m.d_model * act_b / model_shard
+        ici = tp + (2 * n_tot * 2 / model_shard if par.fsdp else 0)
+    else:  # decode: one token for every sequence in the batch
+        s_cache = min(s, m.sliding_window) if m.sliding_window else s
+        flops = 2 * n_act * gb + 4 * l_attn * gb * s_cache * h * hd
+        p_local = n_tot * 2 / (CHIPS if par.fsdp else model_shard)
+        cache_local = _cache_bytes(m, gb, s_cache) / CHIPS
+        hbm = p_local + cache_local
+        tp = 2 * m.num_layers * max(gb // k_agents, 1) * m.d_model * 2 \
+            / model_shard * 2
+        ici = tp + (2 * n_tot * 2 / model_shard if par.fsdp else 0)
+
+    compute = flops / CHIPS / PEAK_FLOPS
+    memory = hbm / HBM_BW
+    collective = ici / ICI_BW
+    model_flops = (6 if shape.kind == "train" else 2) * n_act \
+        * (gb * s if shape.kind != "decode" else gb)
+    dom = max(("compute", compute), ("memory", memory),
+              ("collective", collective), key=lambda kv: kv[1])[0]
+    notes = {
+        "compute": "MXU-bound: increase per-chip batch or quantize",
+        "memory": "HBM-bound: fuse aggregation (Pallas kernel), bf16 grads,"
+                  " or raise arithmetic intensity",
+        "collective": "ICI-bound: rs_mm instead of gather_mm, overlap"
+                      " aggregation with backward, hierarchical (pod-local)"
+                      " aggregation",
+    }
+    return Terms(compute=compute, memory=memory, collective=collective,
+                 model_flops=model_flops,
+                 hlo_flops=(rec or {}).get("flops_per_device"),
+                 dominant=dom, note=notes[dom])
+
+
+def _cache_bytes(m, gb, s_cache):
+    if m.arch_type == "ssm":
+        h = m.d_model // m.ssm_head_dim
+        return m.num_layers * gb * h * m.ssm_head_dim ** 2 * 4
+    per = m.num_layers * gb * s_cache * m.num_kv_heads * m.head_dim * 2 * 2
+    if m.arch_type == "hybrid":
+        groups = m.num_layers // m.attn_every
+        d_in = m.ssm_expand * m.d_model
+        ssm = m.num_layers * gb * (d_in // m.ssm_head_dim) \
+            * m.ssm_head_dim * m.ssm_state * 4
+        return groups * gb * s_cache * m.num_kv_heads * m.head_dim * 4 + ssm
+    return per
+
+
+def load_dryrun(out_dir: str = "experiments/dryrun") -> dict:
+    recs = {}
+    for path in glob.glob(os.path.join(out_dir, "*.json")):
+        with open(path) as f:
+            r = json.load(f)
+        recs[(r["arch"], r["shape"], r["mesh"],
+              r.get("aggregation") or "-")] = r
+    return recs
+
+
+def table(out_dir: str = "experiments/dryrun",
+          mesh: str = "16x16") -> list[tuple]:
+    recs = load_dryrun(out_dir)
+    rows = []
+    for arch in configs.ARCH_IDS:
+        for shape in configs.INPUT_SHAPES:
+            key = next((k for k in recs if k[:3] == (arch, shape, mesh)), None)
+            rec = recs.get(key) if key else None
+            t = analytic_terms(arch, shape, rec=rec)
+            name = f"roofline/{arch}/{shape}/{mesh}"
+            rows.append((name, t.total * 1e6, t.dominant, t, rec))
+    return rows
+
+
+def markdown(out_path: str = "experiments/roofline.md",
+             mesh: str = "16x16") -> None:
+    rows = table(mesh=mesh)
+    lines = [
+        f"# Roofline ({mesh}, {CHIPS} chips, v5e constants)",
+        "",
+        "| arch | shape | compute s | memory s | collective s | dominant |"
+        " MODEL_FLOPS | HLO flops/dev (loop-once) | useful-ratio | fits"
+        " HBM | next move |",
+        "|---|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for name, _, dom, t, rec in rows:
+        _, arch, shape, _ = name.split("/")
+        mem = (rec or {}).get("memory") or {}
+        temp = mem.get("temp_size_in_bytes", 0)
+        args = mem.get("argument_size_in_bytes", 0)
+        fits = "Y" if rec and temp + args < 16 * 2 ** 30 else (
+            "n/a" if not rec else "N")
+        ratio = ""
+        if t.hlo_flops:
+            ratio = f"{t.model_flops / CHIPS / t.hlo_flops:.1f}x"
+        lines.append(
+            f"| {arch} | {shape} | {t.compute:.3e} | {t.memory:.3e} |"
+            f" {t.collective:.3e} | **{t.dominant}** | {t.model_flops:.2e} |"
+            f" {t.hlo_flops or 0:.2e} | {ratio} | {fits} | {t.note} |")
+    os.makedirs(os.path.dirname(out_path), exist_ok=True)
+    with open(out_path, "w") as f:
+        f.write("\n".join(lines) + "\n")
+
+
+def main() -> list[tuple]:
+    out = []
+    for name, us, dom, t, rec in table():
+        out.append((name, us, f"dom={dom}"))
+    markdown()
+    return out
+
+
+if __name__ == "__main__":
+    for name, us, derived in main():
+        print(f"{name},{us:.2f},{derived}")

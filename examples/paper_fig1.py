@@ -1,0 +1,29 @@
+"""Reproduce the paper's Fig. 1 (MSD sweeps) and print the claim checks.
+
+  PYTHONPATH=src python examples/paper_fig1.py [--iters 1000]
+
+Writes experiments/fig1_left.csv / fig1_right.csv (full MSD curves,
+one column per aggregator x setting) for plotting.
+"""
+
+import argparse
+
+from benchmarks import fig1_msd
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--iters", type=int, default=1000)
+    args = ap.parse_args()
+    rows = fig1_msd.main(iters=args.iters)
+    print(f"{'setting':45s} {'steady MSD':>14s}")
+    for name, _, derived in rows:
+        if name.startswith("fig1/claim"):
+            verdict = "PASS" if derived else "FAIL"
+            print(f"{name:45s} {verdict:>14s}")
+        else:
+            print(f"{name:45s} {derived:14.4e}")
+
+
+if __name__ == "__main__":
+    main()

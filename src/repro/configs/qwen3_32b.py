@@ -1,0 +1,22 @@
+"""qwen3-32b [dense]: 64L d_model=5120 64H (GQA kv=8) d_ff=25600
+vocab=151936 -- qk_norm, GQA, head_dim=128 [hf:Qwen/Qwen3-8B family]."""
+import dataclasses
+from repro.configs.base import ArchConfig, ModelConfig, ParallelConfig
+
+MODEL = ModelConfig(
+    name="qwen3-32b", arch_type="dense",
+    num_layers=64, d_model=5120, num_heads=64, num_kv_heads=8, head_dim=128,
+    d_ff=25600, vocab_size=151936, qk_norm=True,
+    act_dtype="bfloat16", q_chunk=512,
+)
+
+CONFIG = ArchConfig(
+    model=MODEL,
+    parallel=ParallelConfig(fsdp=True, microbatches=8, aggregation="rs_mm"),
+)
+
+def smoke_config():
+    return dataclasses.replace(
+        MODEL, num_layers=2, d_model=256, num_heads=8, num_kv_heads=2,
+        head_dim=32, d_ff=512, vocab_size=512, act_dtype="float32",
+        q_chunk=1024)

@@ -1,0 +1,23 @@
+"""Core library: the paper's robust-and-efficient aggregation.
+
+Layers:
+  mestimators  -- rho/psi/weight loss families (huber, tukey, ...)
+  location     -- elementwise (weighted) median/MAD/M/MM location estimates
+  aggregators  -- registry: mean/median/trimmed/geomedian/krum/m_huber/mm_tukey
+  attacks      -- Byzantine behaviors (paper's additive Delta, ALIE, ...)
+  graph        -- topologies + combination matrices
+  diffusion    -- REF-Diffusion (Algorithm 1) + classical ATC diffusion
+  federated    -- FedAvg with pluggable robust server aggregation
+  sharded      -- shard_map robust all-reduce collectives (gather/rs/hier)
+"""
+
+from repro.core import (  # noqa: F401
+    aggregators,
+    attacks,
+    diffusion,
+    federated,
+    graph,
+    location,
+    mestimators,
+    sharded,
+)

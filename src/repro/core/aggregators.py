@@ -1,0 +1,160 @@
+"""Aggregator registry: the paper's MM aggregator plus every baseline.
+
+An aggregator maps ``(K, ...) -> (...)``: K agent vectors (stacked on
+axis 0) to one aggregate, optionally weighted by combination weights
+``a`` of shape (K,).  All aggregators are jit-safe pure functions.
+
+Registry (get_aggregator):
+  mean               -- Eq. (7), the classical weighted average
+  median             -- elementwise median [Yin et al., 2018]
+  trimmed_mean       -- elementwise beta-trimmed mean [Yin et al., 2018]
+  geometric_median   -- Weiszfeld iterations on Eq. (8) [Pillutla et al., 2019]
+  krum               -- Blanchard et al., 2017 (needs num_malicious)
+  m_huber            -- monotone M-estimate (Huber), median/MAD standardized
+  mm_tukey           -- THE PAPER: MM estimate, median/MAD init + Tukey IRLS
+
+``aggregate_pytree`` applies an aggregator leaf-wise to a pytree whose
+leaves are stacked ``(K, ...)`` arrays (e.g. per-agent gradient pytrees).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import location, mestimators
+
+Aggregator = Callable[..., jnp.ndarray]
+
+
+def _normalize_weights(a: Optional[jnp.ndarray], k: int, dtype) -> jnp.ndarray:
+    if a is None:
+        return jnp.full((k,), 1.0 / k, dtype=dtype)
+    a = a.astype(dtype)
+    return a / jnp.sum(a)
+
+
+def mean(x: jnp.ndarray, a: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    a = _normalize_weights(a, x.shape[0], x.dtype)
+    return jnp.tensordot(a, x, axes=(0, 0))
+
+
+def median(x: jnp.ndarray, a: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    if a is None:
+        return location.median(x, axis=0)
+    return location.weighted_median(x, a, axis=0)
+
+
+def trimmed_mean(x: jnp.ndarray, a: Optional[jnp.ndarray] = None,
+                 *, beta: float = 0.25) -> jnp.ndarray:
+    """Remove the floor(beta*K) smallest and largest values per coordinate."""
+    del a  # trimming is rank-based; combination weights are not meaningful
+    k = x.shape[0]
+    t = int(beta * k)
+    xs = jnp.sort(x, axis=0)
+    kept = xs[t:k - t] if t > 0 else xs
+    return jnp.mean(kept, axis=0)
+
+
+def geometric_median(x: jnp.ndarray, a: Optional[jnp.ndarray] = None,
+                     *, num_iters: int = 32, eps: float = 1e-8) -> jnp.ndarray:
+    """Weiszfeld fixed point for the spatial median of K vectors (Eq. 8).
+
+    Treats all trailing axes as one flat vector per agent.
+    """
+    k = x.shape[0]
+    a = _normalize_weights(a, k, x.dtype)
+    flat = x.reshape(k, -1)
+
+    def body(z, _):
+        d = jnp.sqrt(jnp.sum((flat - z[None]) ** 2, axis=1) + eps)  # (K,)
+        w = a / d
+        z_new = jnp.sum(w[:, None] * flat, axis=0) / jnp.sum(w)
+        return z_new, None
+
+    z0 = jnp.sum(a[:, None] * flat, axis=0)
+    z, _ = jax.lax.scan(body, z0, None, length=num_iters)
+    return z.reshape(x.shape[1:])
+
+
+def krum(x: jnp.ndarray, a: Optional[jnp.ndarray] = None,
+         *, num_malicious: int = 1, multi: int = 1) -> jnp.ndarray:
+    """(Multi-)Krum: select the vector(s) with smallest sum of squared
+    distances to their K - f - 2 nearest neighbors [Blanchard et al. 2017].
+    """
+    del a
+    k = x.shape[0]
+    flat = x.reshape(k, -1)
+    sq = jnp.sum((flat[:, None, :] - flat[None, :, :]) ** 2, axis=-1)  # (K,K)
+    # exclude self-distance by setting the diagonal to +inf
+    sq = sq + jnp.diag(jnp.full((k,), jnp.inf, dtype=sq.dtype))
+    n_near = max(k - num_malicious - 2, 1)
+    near = jnp.sort(sq, axis=1)[:, :n_near]
+    scores = jnp.sum(near, axis=1)                                     # (K,)
+    if multi <= 1:
+        best = jnp.argmin(scores)
+        return x[best]
+    sel = jnp.argsort(scores)[:multi]
+    return jnp.mean(x[sel], axis=0)
+
+
+def m_huber(x: jnp.ndarray, a: Optional[jnp.ndarray] = None,
+            *, num_iters: int = 10) -> jnp.ndarray:
+    return location.mm_estimate(
+        x, a=a, loss=mestimators.HUBER, num_iters=num_iters
+    ).estimate
+
+
+def mm_tukey(x: jnp.ndarray, a: Optional[jnp.ndarray] = None,
+             *, num_iters: int = 10, c: float = mestimators.TUKEY_C95
+             ) -> jnp.ndarray:
+    """The paper's REF aggregator (Algorithm 1, steps 2-3)."""
+    loss = mestimators.TUKEY if c == mestimators.TUKEY_C95 else mestimators.make_tukey(c)
+    return location.mm_estimate(x, a=a, loss=loss, num_iters=num_iters).estimate
+
+
+def mm_pallas(x: jnp.ndarray, a: Optional[jnp.ndarray] = None,
+              *, num_iters: int = 10) -> jnp.ndarray:
+    """The REF aggregator computed by the fused Pallas TPU kernel
+    (interpret mode on CPU).  Uniform weights only -- weighted calls
+    fall back to the jnp path."""
+    if a is not None:
+        return mm_tukey(x, a, num_iters=num_iters)
+    from repro.kernels import ops  # deferred: keep core import-light
+    return ops.mm_aggregate(x, num_iters=num_iters)
+
+
+_REGISTRY: dict[str, Aggregator] = {
+    "mean": mean,
+    "median": median,
+    "trimmed_mean": trimmed_mean,
+    "geometric_median": geometric_median,
+    "krum": krum,
+    "m_huber": m_huber,
+    "mm_tukey": mm_tukey,
+    "mm_pallas": mm_pallas,
+}
+
+# the paper's name for mm_tukey-based diffusion
+_REGISTRY["ref"] = mm_tukey
+
+
+def names() -> list[str]:
+    return sorted(_REGISTRY)
+
+
+def get_aggregator(name: str, **kwargs) -> Aggregator:
+    try:
+        fn = _REGISTRY[name]
+    except KeyError:
+        raise ValueError(f"unknown aggregator {name!r}; known: {names()}") from None
+    return functools.partial(fn, **kwargs) if kwargs else fn
+
+
+def aggregate_pytree(tree, name_or_fn, a: Optional[jnp.ndarray] = None, **kwargs):
+    """Apply an aggregator leaf-wise to a pytree of stacked (K, ...) leaves."""
+    fn = get_aggregator(name_or_fn, **kwargs) if isinstance(name_or_fn, str) else name_or_fn
+    return jax.tree.map(lambda leaf: fn(leaf, a), tree)

@@ -1,0 +1,142 @@
+"""Byzantine attack models.
+
+An attack transforms the *honest* update an agent would have sent into
+the corrupted value it actually sends.  Signature:
+
+    attack(honest: (K, ...) stacked updates, mask: (K,) bool malicious,
+           key: PRNGKey, step: int) -> (K, ...) corrupted stack
+
+so attacks may collude (see ALIE).  All are jit-safe.
+
+Registry:
+  additive   -- the paper's attack (Eq. 34): phi + delta * 1
+  sign_flip  -- send -gamma * phi
+  gaussian   -- replace with N(0, sigma^2)
+  zero       -- send zeros (free-rider / dropout)
+  scale      -- send gamma * phi (model poisoning by scaling)
+  alie       -- "A Little Is Enough": mean + z * std of honest updates,
+                the strongest inlier-looking collusion attack
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+Attack = Callable[..., jnp.ndarray]
+
+
+def _apply_mask(honest, corrupted, mask):
+    m = mask.reshape((mask.shape[0],) + (1,) * (honest.ndim - 1))
+    return jnp.where(m, corrupted, honest)
+
+
+def additive(honest, mask, key=None, step=0, *, delta: float = 1000.0):
+    """The paper's perturbation: Delta = delta * 1 added to the update."""
+    del key, step
+    return _apply_mask(honest, honest + delta, mask)
+
+
+def sign_flip(honest, mask, key=None, step=0, *, gamma: float = 1.0):
+    del key, step
+    return _apply_mask(honest, -gamma * honest, mask)
+
+
+def gaussian(honest, mask, key, step=0, *, sigma: float = 10.0):
+    del step
+    noise = sigma * jax.random.normal(key, honest.shape, honest.dtype)
+    return _apply_mask(honest, noise, mask)
+
+
+def zero(honest, mask, key=None, step=0):
+    del key, step
+    return _apply_mask(honest, jnp.zeros_like(honest), mask)
+
+
+def scale(honest, mask, key=None, step=0, *, gamma: float = 50.0):
+    del key, step
+    return _apply_mask(honest, gamma * honest, mask)
+
+
+def alie(honest, mask, key=None, step=0, *, z: Optional[float] = None):
+    """'A Little Is Enough' [Baruch et al. 2019]: colluders send
+    mean + z*std of the benign updates, with z just inside the inlier
+    acceptance region, evading coordinate-wise defenses."""
+    del key, step
+    k = honest.shape[0]
+    m = mask.reshape((k,) + (1,) * (honest.ndim - 1)).astype(honest.dtype)
+    n_b = jnp.maximum(jnp.sum(1.0 - m), 1.0)
+    mu = jnp.sum(honest * (1.0 - m), axis=0) / n_b
+    var = jnp.sum(((honest - mu[None]) ** 2) * (1.0 - m), axis=0) / n_b
+    std = jnp.sqrt(var + 1e-12)
+    if z is None:
+        z = 1.0
+    return _apply_mask(honest, jnp.broadcast_to(mu + z * std, honest.shape), mask)
+
+
+def apply_local(g, is_malicious, kind: str, kwargs: Optional[dict] = None):
+    """Per-rank attack application (for manual/shard_map regions):
+    ``is_malicious`` is a scalar bool for *this* rank; ``g`` is a pytree
+    of this rank's honest values.  Collusion attacks (alie) are not
+    available in local form."""
+    kwargs = kwargs or {}
+    if kind == "additive":
+        delta = kwargs.get("delta", 1000.0)
+        fn = lambda x: x + delta
+    elif kind == "sign_flip":
+        gamma = kwargs.get("gamma", 1.0)
+        fn = lambda x: -gamma * x
+    elif kind == "zero":
+        fn = jnp.zeros_like
+    elif kind == "scale":
+        gamma = kwargs.get("gamma", 50.0)
+        fn = lambda x: gamma * x
+    else:
+        raise ValueError(f"attack {kind!r} has no local form")
+    return jax.tree.map(lambda x: jnp.where(is_malicious, fn(x), x), g)
+
+
+_REGISTRY: dict[str, Attack] = {
+    "additive": additive,
+    "sign_flip": sign_flip,
+    "gaussian": gaussian,
+    "zero": zero,
+    "scale": scale,
+    "alie": alie,
+}
+
+
+def names() -> list[str]:
+    return sorted(_REGISTRY)
+
+
+def get_attack(name: str, **kwargs) -> Attack:
+    try:
+        fn = _REGISTRY[name]
+    except KeyError:
+        raise ValueError(f"unknown attack {name!r}; known: {names()}") from None
+    return functools.partial(fn, **kwargs) if kwargs else fn
+
+
+@dataclasses.dataclass(frozen=True)
+class ByzantineConfig:
+    """Which agents are malicious and how they behave."""
+
+    num_malicious: int = 0
+    attack: str = "additive"
+    attack_kwargs: tuple = ()  # tuple of (key, value) pairs for hashability
+
+    def malicious_mask(self, k: int) -> jnp.ndarray:
+        """Deterministic mask: the *last* num_malicious agents are malicious."""
+        idx = jnp.arange(k)
+        return idx >= (k - self.num_malicious)
+
+    def apply(self, honest: jnp.ndarray, key, step: int = 0) -> jnp.ndarray:
+        if self.num_malicious == 0:
+            return honest
+        fn = get_attack(self.attack, **dict(self.attack_kwargs))
+        return fn(honest, self.malicious_mask(honest.shape[0]), key, step)

@@ -1,0 +1,89 @@
+"""Network topologies and combination matrices for decentralized learning.
+
+A topology is a symmetric boolean adjacency matrix with self-loops
+(every agent is in its own neighborhood).  A combination matrix A is
+left-stochastic: columns sum to one, A[l, k] = a_{lk} is the weight
+agent k gives to the update received from agent l (paper Eq. 6).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def fully_connected(k: int) -> np.ndarray:
+    return np.ones((k, k), dtype=bool)
+
+
+def ring(k: int, hops: int = 1) -> np.ndarray:
+    adj = np.eye(k, dtype=bool)
+    for h in range(1, hops + 1):
+        adj |= np.eye(k, k=h, dtype=bool) | np.eye(k, k=-h, dtype=bool)
+        adj |= np.eye(k, k=k - h, dtype=bool) | np.eye(k, k=-(k - h), dtype=bool)
+    return adj
+
+
+def grid(rows: int, cols: int) -> np.ndarray:
+    k = rows * cols
+    adj = np.eye(k, dtype=bool)
+    for r in range(rows):
+        for c in range(cols):
+            i = r * cols + c
+            if c + 1 < cols:
+                adj[i, i + 1] = adj[i + 1, i] = True
+            if r + 1 < rows:
+                adj[i, i + cols] = adj[i + cols, i] = True
+    return adj
+
+
+def erdos_renyi(k: int, p: float, seed: int = 0) -> np.ndarray:
+    """ER graph, re-sampled until connected (with self-loops added)."""
+    rng = np.random.default_rng(seed)
+    for _ in range(1000):
+        upper = rng.random((k, k)) < p
+        adj = np.triu(upper, 1)
+        adj = adj | adj.T | np.eye(k, dtype=bool)
+        if is_connected(adj):
+            return adj
+    raise RuntimeError(f"could not sample a connected ER({k}, {p}) graph")
+
+
+def is_connected(adj: np.ndarray) -> bool:
+    k = adj.shape[0]
+    seen = np.zeros(k, dtype=bool)
+    stack = [0]
+    seen[0] = True
+    while stack:
+        i = stack.pop()
+        for j in np.nonzero(adj[i])[0]:
+            if not seen[j]:
+                seen[j] = True
+                stack.append(int(j))
+    return bool(seen.all())
+
+
+def uniform_weights(adj: np.ndarray) -> np.ndarray:
+    """a_{lk} = 1/|N_k| for l in N_k: columns sum to one."""
+    adj = adj.astype(np.float64)
+    return adj / adj.sum(axis=0, keepdims=True)
+
+
+def metropolis_weights(adj: np.ndarray) -> np.ndarray:
+    """Metropolis-Hastings rule: doubly-stochastic for symmetric adj."""
+    k = adj.shape[0]
+    deg = adj.sum(axis=0)  # includes self-loop
+    a = np.zeros((k, k))
+    for l in range(k):
+        for kk in range(k):
+            if l != kk and adj[l, kk]:
+                a[l, kk] = 1.0 / max(deg[l], deg[kk])
+    a[np.diag_indices(k)] = 1.0 - a.sum(axis=0)
+    return a
+
+
+def validate_combination_matrix(a: np.ndarray, atol: float = 1e-10) -> None:
+    if (a < -atol).any():
+        raise ValueError("combination matrix has negative entries")
+    col = a.sum(axis=0)
+    if not np.allclose(col, 1.0, atol=1e-8):
+        raise ValueError(f"columns must sum to 1, got {col}")

@@ -1,0 +1,151 @@
+"""Distributed robust aggregation collectives (shard_map building blocks).
+
+Mean aggregation lowers to an all-reduce (reduce-scatter + all-gather).
+An MM/median aggregator is a *non-linear* reduction: every coordinate
+needs all K per-replica values, so it cannot ride a reduction tree.
+This module provides three lowerings, all exact drop-in replacements
+for ``jax.lax.pmean`` over a named mesh axis (to be called inside
+``shard_map``):
+
+  gather_mm  (paper-faithful baseline)
+      all_gather(K x M) on every replica, full MM fixed point everywhere.
+      Comm/device ~ (K-1)*M_local bytes; IRLS compute ~ K-redundant.
+
+  rs_mm      (beyond-paper, this work)
+      Robust aggregation is elementwise, so it commutes with parameter
+      sharding: all_to_all re-shards the K replica vectors so each rank
+      owns the full K-column for an M/K slice, runs MM on M/K coords,
+      then all_gathers the results.  Comm/device ~ 2*(K-1)/K*M bytes --
+      the same wire cost as a *mean* all-reduce -- and 1/K the IRLS
+      compute.  Bitwise-identical output to gather_mm (tested).
+
+  hier_mm    (beyond-paper ablation, multi-pod only)
+      MM within the pod's 'data' axis, then plain mean across the 'pod'
+      axis.  Confines the heavy robust collective to intra-pod ICI; the
+      cross-pod step is a 2-way psum.  NOTE: this changes the estimator
+      (per-pod breakdown point) -- ablation, not the default.
+
+All three take an aggregator from core.aggregators (default mm_tukey)
+applied along axis 0 of a stacked (K, ...) array.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable, Sequence, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import aggregators
+
+AxisName = Union[str, Sequence[str]]
+
+
+def _axis_size(axis_name: AxisName) -> int:
+    return jax.lax.psum(1, axis_name)
+
+
+def _get_agg(aggregator, **kwargs) -> Callable:
+    if isinstance(aggregator, str):
+        return aggregators.get_aggregator(aggregator, **kwargs)
+    return functools.partial(aggregator, **kwargs) if kwargs else aggregator
+
+
+def gather_mm(x: jnp.ndarray, axis_name: AxisName, *,
+              aggregator="mm_tukey", **agg_kwargs) -> jnp.ndarray:
+    """Paper-faithful robust all-reduce: all_gather + full local MM."""
+    agg = _get_agg(aggregator, **agg_kwargs)
+    stacked = jax.lax.all_gather(x, axis_name)          # (K, ...)
+    return agg(stacked, None)
+
+
+def rs_mm(x: jnp.ndarray, axis_name: AxisName, *,
+          aggregator="mm_tukey", **agg_kwargs) -> jnp.ndarray:
+    """Reduce-scatter-style robust all-reduce (elementwise MM commutes
+    with sharding): all_to_all -> local MM on M/K coords -> all_gather.
+
+    When dim 0 of ``x`` divides K, the split happens along dim 0 and all
+    trailing dims stay intact -- this preserves any model-axis sharding
+    of the trailing dims (flattening them would force SPMD replication).
+    """
+    agg = _get_agg(aggregator, **agg_kwargs)
+    k = _axis_size(axis_name)
+
+    if x.ndim >= 2 and x.shape[0] % k == 0:
+        chunks = x.reshape((k, x.shape[0] // k) + x.shape[1:])
+        swapped = jax.lax.all_to_all(chunks, axis_name,
+                                     split_axis=0, concat_axis=0)
+        local_est = agg(swapped, None)                   # (d0/K, ...)
+        return jax.lax.all_gather(local_est, axis_name, axis=0, tiled=True)
+
+    shape = x.shape
+    flat = x.reshape(-1)
+    m = flat.shape[0]
+    pad = (-m) % k
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((pad,), flat.dtype)])
+    chunks = flat.reshape(k, -1)                         # (K, M'/K)
+    # after all_to_all: row l of the local array = this rank's slice as
+    # computed by replica l  ->  axis 0 is the agent axis for our slice.
+    swapped = jax.lax.all_to_all(chunks, axis_name, split_axis=0, concat_axis=0)
+    local_est = agg(swapped, None)                       # (M'/K,)
+    full = jax.lax.all_gather(local_est, axis_name)      # (K, M'/K)
+    out = full.reshape(-1)
+    if pad:
+        out = out[:m]
+    return out.reshape(shape)
+
+
+def hier_mm(x: jnp.ndarray, inner_axis: str, outer_axis: str, *,
+            aggregator="mm_tukey", inner_method: str = "rs_mm",
+            **agg_kwargs) -> jnp.ndarray:
+    """Two-level aggregation: robust within ``inner_axis`` (a pod's data
+    ranks), arithmetic mean across ``outer_axis`` (pods).  Approximate --
+    breakdown guarantees hold per pod."""
+    inner = rs_mm if inner_method == "rs_mm" else gather_mm
+    pod_est = inner(x, inner_axis, aggregator=aggregator, **agg_kwargs)
+    return jax.lax.pmean(pod_est, outer_axis)
+
+
+def mean_all_reduce(x: jnp.ndarray, axis_name: AxisName) -> jnp.ndarray:
+    """The non-robust baseline (classical data-parallel pmean)."""
+    return jax.lax.pmean(x, axis_name)
+
+
+_METHODS = {
+    "gather_mm": gather_mm,
+    "rs_mm": rs_mm,
+    "mean": mean_all_reduce,
+}
+
+
+def robust_all_reduce(x: jnp.ndarray, axis_name: AxisName, *,
+                      method: str = "rs_mm", aggregator="mm_tukey",
+                      **agg_kwargs) -> jnp.ndarray:
+    """Dispatch by method name.  ``mean`` ignores aggregator kwargs."""
+    if method == "mean":
+        return mean_all_reduce(x, axis_name)
+    if method == "hier_mm":
+        if not (isinstance(axis_name, (tuple, list)) and len(axis_name) == 2):
+            raise ValueError("hier_mm needs axis_name=(outer, inner)")
+        outer, inner = axis_name
+        return hier_mm(x, inner, outer, aggregator=aggregator, **agg_kwargs)
+    try:
+        fn = _METHODS[method]
+    except KeyError:
+        raise ValueError(
+            f"unknown method {method!r}; known: {sorted(_METHODS) + ['hier_mm']}"
+        ) from None
+    return fn(x, axis_name, aggregator=aggregator, **agg_kwargs)
+
+
+def robust_all_reduce_tree(tree, axis_name: AxisName, *, method: str = "rs_mm",
+                           aggregator="mm_tukey", **agg_kwargs):
+    """Leaf-wise robust all-reduce over a gradient pytree."""
+    return jax.tree.map(
+        lambda g: robust_all_reduce(
+            g, axis_name, method=method, aggregator=aggregator, **agg_kwargs
+        ),
+        tree,
+    )

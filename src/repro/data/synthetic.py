@@ -1,0 +1,107 @@
+"""Synthetic data sources.
+
+1. The paper's linear-model experiment (Sec. 4): per-agent streaming
+   regression pairs d_k = u_k^T w_o + v_k with u_k ~ N(0, I_M),
+   v_k ~ N(0, sigma_v^2), and the LMS gradient approximation (Eq. 33).
+
+2. Token streams for the LM training substrate: an infinite synthetic
+   corpus with Zipfian unigram statistics and a deterministic
+   shift-register structure so that models can actually reduce loss on
+   it (next token depends on the previous token), sharded by host.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# Paper experiment (Sec. 4)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class LinearModelProblem:
+    """Streaming least-mean-squares problem shared by K agents."""
+
+    dim: int = 10
+    noise_var: float = 0.01
+    seed: int = 0
+
+    @property
+    def w_star(self) -> jnp.ndarray:
+        rng = np.random.default_rng(self.seed)
+        w = rng.normal(size=(self.dim,))
+        w = w / np.linalg.norm(w)  # normalized target, as is customary
+        return jnp.asarray(w, dtype=jnp.float32)
+
+    def grad_fn(self):
+        """Stacked stochastic LMS gradients for all K agents (Eq. 33).
+
+        Returns fn: (W (K, M), key) -> (K, M) with
+        grad_hat = -u (d - u^T w),  d = u^T w_star + v.
+        Fresh sample per agent per call (streaming setting).
+        """
+        w_star = self.w_star
+        sigma_v = float(np.sqrt(self.noise_var))
+        dim = self.dim
+
+        def grad(w_stack: jnp.ndarray, key: jax.Array) -> jnp.ndarray:
+            k_agents = w_stack.shape[0]
+            ku, kv = jax.random.split(key)
+            u = jax.random.normal(ku, (k_agents, dim), dtype=w_stack.dtype)
+            v = sigma_v * jax.random.normal(kv, (k_agents,), dtype=w_stack.dtype)
+            d = u @ w_star + v                              # (K,)
+            err = d - jnp.sum(u * w_stack, axis=1)          # (K,)
+            return -u * err[:, None]
+
+        return grad
+
+
+# ---------------------------------------------------------------------------
+# LM token streams
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class TokenStreamConfig:
+    vocab_size: int
+    seq_len: int
+    batch_size: int          # per-host batch
+    seed: int = 0
+    structure: float = 0.7   # prob. next token is a deterministic fn of prev
+
+
+def _zipf_probs(vocab: int, alpha: float = 1.1) -> np.ndarray:
+    ranks = np.arange(1, vocab + 1, dtype=np.float64)
+    p = ranks ** (-alpha)
+    return p / p.sum()
+
+
+def token_batches(cfg: TokenStreamConfig) -> Iterator[dict]:
+    """Infinite iterator of {'tokens': (B, T+1) int32} host arrays.
+
+    tokens[:, :-1] are inputs, tokens[:, 1:] are labels.  A fraction
+    ``structure`` of transitions follow t_{i+1} = (a*t_i + c) % V so the
+    stream has learnable structure; the rest are Zipf draws.
+    """
+    rng = np.random.default_rng(cfg.seed)
+    probs = _zipf_probs(cfg.vocab_size)
+    a, c = 6364136223846793005 % cfg.vocab_size or 1, 1442695040888963407 % cfg.vocab_size
+    while True:
+        noise = rng.choice(cfg.vocab_size, size=(cfg.batch_size, cfg.seq_len + 1), p=probs)
+        structured = rng.random((cfg.batch_size, cfg.seq_len + 1)) < cfg.structure
+        toks = noise.copy()
+        for t in range(1, cfg.seq_len + 1):
+            det = (a * toks[:, t - 1] + c) % cfg.vocab_size
+            toks[:, t] = np.where(structured[:, t], det, noise[:, t])
+        yield {"tokens": toks.astype(np.int32)}
+
+
+def make_lm_batch(key: jax.Array, batch: int, seq: int, vocab: int) -> dict:
+    """Pure-JAX quick batch (for tests/smoke): uniform tokens."""
+    toks = jax.random.randint(key, (batch, seq + 1), 0, vocab, dtype=jnp.int32)
+    return {"tokens": toks}

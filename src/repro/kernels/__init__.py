@@ -1,0 +1,8 @@
+"""Pallas TPU kernels for the perf-critical aggregation hot-spot.
+
+mm_aggregate.py -- fused median/MAD/Tukey-IRLS over (K, M) tiles
+ops.py          -- jit'd wrappers (single array + whole-pytree launch)
+ref.py          -- pure-jnp oracle (tests assert kernel == ref)
+"""
+
+from repro.kernels import mm_aggregate, ops, ref  # noqa: F401

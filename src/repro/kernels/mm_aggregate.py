@@ -1,0 +1,148 @@
+"""Pallas TPU kernel for fused elementwise MM-aggregation.
+
+The hot loop of the paper's aggregator is, per model coordinate m:
+
+    med   = median_k  phi[k, m]                       (robust init)
+    s     = 1.4826 * median_k |phi[k, m] - med|       (MAD scale)
+    mu_0  = med
+    T x:  w_k = tukey_w((phi[k,m] - mu_t) / (c*s));  mu_{t+1} = sum w_k phi / sum w_k
+
+A naive jnp composition round-trips HBM ~3+T times (two sorts, T
+weighted reductions).  The kernel fuses *everything* into one VMEM
+residency per (K, bm) tile: the agent axis K is small (the mesh's data
+axis, <= 64 here), so a full tile of K rows x bm=512 lanes sits in a
+few hundred KB of VMEM, and the whole estimate is computed before the
+tile is written back once.
+
+TPU adaptation notes (vs a GPU port):
+  * No `sort` primitive is needed: K is *static*, so the median is an
+    odd-even transposition network (K_pad passes of min/max on
+    sublane-reshaped registers) -- pure VPU ops, no data-dependent
+    control flow.
+  * K is padded to the next even size with +inf sentinel rows; the
+    median/MAD read fixed ranks (K-1)//2 and K//2 of the sorted tile,
+    so sentinels never enter.  IRLS masks sentinel rows explicitly
+    (0 * inf = nan otherwise).
+  * m is tiled in multiples of 128 lanes (bm defaults to 512); the
+    launcher pads M and strips the pad.
+  * Compute is float32 internally regardless of input dtype (bf16
+    gradients upcast per tile -- matches the reference).
+
+Grid: (M_pad // bm,).  in: (K_pad, bm) VMEM block; out: (1, bm).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import mestimators
+
+DEFAULT_BLOCK_M = 512
+_SCALE_FLOOR = 1e-12
+_MAD_CONSISTENCY = 1.4826022185056018
+
+
+def _oddeven_sort_rows(x: jnp.ndarray) -> jnp.ndarray:
+    """Sort along axis 0 (static, even length) by odd-even transposition.
+
+    P passes of compare-exchange on adjacent rows; all shapes static,
+    lowers to min/max + sublane reshapes only.
+    """
+    p = x.shape[0]
+    assert p % 2 == 0, "row count must be padded to even"
+    for step in range(p):
+        if step % 2 == 0:
+            pairs = x.reshape(p // 2, 2, x.shape[1])
+            lo = jnp.minimum(pairs[:, 0], pairs[:, 1])
+            hi = jnp.maximum(pairs[:, 0], pairs[:, 1])
+            x = jnp.stack([lo, hi], axis=1).reshape(p, x.shape[1])
+        elif p > 2:
+            mid = x[1:p - 1].reshape((p - 2) // 2, 2, x.shape[1])
+            lo = jnp.minimum(mid[:, 0], mid[:, 1])
+            hi = jnp.maximum(mid[:, 0], mid[:, 1])
+            middle = jnp.stack([lo, hi], axis=1).reshape(p - 2, x.shape[1])
+            x = jnp.concatenate([x[:1], middle, x[p - 1:]], axis=0)
+    return x
+
+
+def _median_rows(x_sorted: jnp.ndarray, k: int) -> jnp.ndarray:
+    """Median of the first k (valid) rows of an ascending-sorted tile whose
+    pad rows are +inf (and therefore sorted to the end)."""
+    lo = x_sorted[(k - 1) // 2]
+    hi = x_sorted[k // 2]
+    return 0.5 * (lo + hi)
+
+
+def _mm_kernel(x_ref, o_ref, *, k: int, num_iters: int, c: float):
+    xp = x_ref[...].astype(jnp.float32)              # (K_pad, bm), pads=+inf
+    k_pad = xp.shape[0]
+    valid = (jax.lax.broadcasted_iota(jnp.int32, xp.shape, 0) < k)
+    x = jnp.where(valid, xp, 0.0)                    # masked values for IRLS
+
+    # --- robust init: median + MAD (sentinels sort to the end) ---
+    xs = _oddeven_sort_rows(xp)
+    med = _median_rows(xs, k)                        # (bm,)
+    dev = jnp.where(valid, jnp.abs(xp - med[None]), jnp.inf)
+    ds = _oddeven_sort_rows(dev)
+    scale = jnp.maximum(_MAD_CONSISTENCY * _median_rows(ds, k), _SCALE_FLOOR)
+
+    # --- efficient refinement: fixed-T Tukey IRLS ---
+    c2 = jnp.float32(c * c)
+
+    def body(t, mu):
+        y = (x - mu[None]) / scale[None]
+        u = jnp.clip(1.0 - (y * y) / c2, 0.0, 1.0)
+        w = jnp.where(valid, u * u, 0.0)
+        num = jnp.sum(w * x, axis=0)
+        den = jnp.sum(w, axis=0)
+        safe = den > _SCALE_FLOOR
+        return jnp.where(safe, num / jnp.where(safe, den, 1.0), mu)
+
+    mu = jax.lax.fori_loop(0, num_iters, body, med)
+    o_ref[...] = mu[None].astype(o_ref.dtype)
+
+
+def mm_aggregate_2d(
+    x: jnp.ndarray,
+    *,
+    num_iters: int = 10,
+    c: float = mestimators.TUKEY_C95,
+    block_m: int = DEFAULT_BLOCK_M,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """MM-aggregate a (K, M) array along axis 0 -> (M,) via Pallas.
+
+    Pads K to even with +inf sentinel rows and M to a block multiple.
+    """
+    if x.ndim != 2:
+        raise ValueError(f"mm_aggregate_2d wants (K, M), got {x.shape}")
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    k, m = x.shape
+    k_pad = k + (k % 2)
+    m_pad = (-m) % block_m
+
+    xp = x
+    if k_pad != k:
+        inf_row = jnp.full((k_pad - k, m), jnp.inf, dtype=x.dtype)
+        xp = jnp.concatenate([xp, inf_row], axis=0)
+    if m_pad:
+        xp = jnp.concatenate(
+            [xp, jnp.full((k_pad, m_pad), jnp.inf, dtype=x.dtype)], axis=1
+        )
+    m_total = m + m_pad
+
+    kernel = functools.partial(_mm_kernel, k=k, num_iters=num_iters, c=c)
+    out = pl.pallas_call(
+        kernel,
+        grid=(m_total // block_m,),
+        in_specs=[pl.BlockSpec((k_pad, block_m), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((1, block_m), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, m_total), x.dtype),
+        interpret=interpret,
+    )(xp)
+    return out[0, :m]

@@ -1,0 +1,68 @@
+"""Public jit'd wrappers around the Pallas MM-aggregation kernel.
+
+``mm_aggregate`` handles arbitrary trailing shapes; ``mm_aggregate_tree``
+flattens a whole gradient pytree into one (K, M_total) kernel launch so
+small leaves (biases, norms) don't each pay a dispatch.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import mestimators
+from repro.kernels import mm_aggregate as _k
+
+
+@functools.partial(jax.jit, static_argnames=("num_iters", "c", "block_m", "interpret"))
+def mm_aggregate(
+    x: jnp.ndarray,
+    *,
+    num_iters: int = 10,
+    c: float = mestimators.TUKEY_C95,
+    block_m: int = _k.DEFAULT_BLOCK_M,
+    interpret: Optional[bool] = None,
+) -> jnp.ndarray:
+    """MM location estimate along axis 0: (K, ...) -> (...)."""
+    k = x.shape[0]
+    flat = x.reshape(k, -1)
+    out = _k.mm_aggregate_2d(
+        flat, num_iters=num_iters, c=c, block_m=block_m, interpret=interpret
+    )
+    return out.reshape(x.shape[1:])
+
+
+def mm_aggregate_tree(
+    tree,
+    *,
+    num_iters: int = 10,
+    c: float = mestimators.TUKEY_C95,
+    block_m: int = _k.DEFAULT_BLOCK_M,
+    interpret: Optional[bool] = None,
+):
+    """Aggregate a pytree of stacked (K, ...) leaves in ONE kernel launch.
+
+    All leaves are flattened, concatenated along m, aggregated, and
+    split back -- one VMEM pipeline over the whole model instead of one
+    pallas_call per leaf.
+    """
+    leaves, treedef = jax.tree.flatten(tree)
+    if not leaves:
+        return tree
+    k = leaves[0].shape[0]
+    sizes = [int(l.size) // k for l in leaves]
+    flat = jnp.concatenate(
+        [l.astype(jnp.float32).reshape(k, -1) for l in leaves], axis=1
+    )
+    agg = mm_aggregate(
+        flat, num_iters=num_iters, c=c, block_m=block_m, interpret=interpret
+    )
+    outs = []
+    off = 0
+    for leaf, n in zip(leaves, sizes):
+        outs.append(agg[off:off + n].reshape(leaf.shape[1:]).astype(leaf.dtype))
+        off += n
+    return jax.tree.unflatten(treedef, outs)

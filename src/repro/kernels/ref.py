@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for the MM-aggregation kernel.
+
+This is the exact algorithm the Pallas kernel implements, written with
+plain jax.numpy, and is the reference every kernel test asserts
+against.  It intentionally reuses core.location (single source of truth
+for the statistics) with uniform weights, Tukey loss, and a fixed IRLS
+iteration count.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import location, mestimators
+
+
+def mm_aggregate_ref(x: jnp.ndarray, *, num_iters: int = 10,
+                     c: float = mestimators.TUKEY_C95) -> jnp.ndarray:
+    """MM location estimate along axis 0 of ``x`` (K, ...) -> (...).
+
+    median/MAD init + ``num_iters`` Tukey-IRLS refinement steps, uniform
+    agent weights, computed in float32 regardless of input dtype.
+    """
+    loss = mestimators.TUKEY if c == mestimators.TUKEY_C95 else mestimators.make_tukey(c)
+    xf = x.astype(jnp.float32)
+    out = location.mm_estimate(xf, loss=loss, num_iters=num_iters).estimate
+    return out.astype(x.dtype)

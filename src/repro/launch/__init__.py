@@ -1,0 +1,1 @@
+from repro.launch import sharding  # noqa: F401

@@ -1,0 +1,40 @@
+"""Mesh construction.  Functions only -- importing this module never
+touches jax device state."""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Target deployment: TPU v5e, 16x16 = 256 chips/pod, 2 pods.
+
+    Axes: 'data' carries the K aggregation agents (the paper's network),
+    'model' carries tensor/expert parallelism, 'pod' is the cross-pod
+    data axis (agents = pod x data = 32 when multi_pod).
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(model: int = 1):
+    """Mesh over whatever local devices exist (tests / CPU examples)."""
+    n = len(jax.devices())
+    assert n % model == 0, (n, model)
+    return jax.make_mesh(
+        (n // model, model), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+def agent_axes(mesh) -> tuple:
+    """The mesh axes whose product forms the K aggregation agents."""
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def num_agents(mesh) -> int:
+    k = 1
+    for a in agent_axes(mesh):
+        k *= mesh.shape[a]
+    return k

@@ -1,0 +1,127 @@
+"""Training entry point (single-host real runs; the production mesh is
+exercised via dryrun.py).
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen3-0.6b \
+      --steps 100 --aggregation rs_mm --malicious 1 --attack additive
+
+Uses the reduced smoke config by default (CPU container); --full-config
+loads the assigned full architecture (only sensible on a real cluster).
+Simulates the paper's Byzantine agents as data-parallel ranks whose
+gradients are corrupted before aggregation.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.checkpoint import checkpoint as ckpt
+from repro.core import attacks
+from repro.data import synthetic
+from repro.launch import steps
+from repro.launch.mesh import make_host_mesh, num_agents
+from repro.models import model as M
+from repro.optim import optimizers
+
+
+def build(args):
+    mesh = make_host_mesh(model=args.model_parallel)
+    if args.full_config:
+        model = configs.load_arch(args.arch).model
+    else:
+        model = configs.load_smoke(args.arch)
+    if args.layers:
+        model = dataclasses.replace(model, num_layers=args.layers)
+    if args.d_model:
+        # keep head structure consistent when scaling width
+        scale = args.d_model // model.d_model
+        model = dataclasses.replace(
+            model, d_model=args.d_model, d_ff=model.d_ff * max(scale, 1))
+    par = configs.ParallelConfig(
+        fsdp=False, microbatches=args.microbatches,
+        aggregation=args.aggregation)
+    opt_cfg = optimizers.OptimizerConfig(
+        learning_rate=args.lr, warmup_steps=min(100, args.steps // 10 + 1),
+        total_steps=args.steps)
+    byz = None
+    if args.malicious:
+        byz = attacks.ByzantineConfig(
+            num_malicious=args.malicious, attack=args.attack,
+            attack_kwargs=(("delta", args.delta),))
+    step, _ = steps.make_train_step_gspmd(model, par, opt_cfg, mesh, byz)
+    return mesh, model, par, opt_cfg, jax.jit(step, donate_argnums=(0, 1))
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-0.6b")
+    ap.add_argument("--full-config", action="store_true")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--layers", type=int, default=0)
+    ap.add_argument("--d-model", type=int, default=0)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--model-parallel", type=int, default=1)
+    ap.add_argument("--aggregation", default="rs_mm",
+                    choices=["mean", "gather_mm", "rs_mm"])
+    ap.add_argument("--malicious", type=int, default=0)
+    ap.add_argument("--attack", default="additive")
+    ap.add_argument("--delta", type=float, default=1000.0)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--checkpoint", default="")
+    args = ap.parse_args(argv)
+
+    mesh, model, par, opt_cfg, step = build(args)
+    k = num_agents(mesh)
+    batch = args.batch
+    if batch % k:
+        batch = k * max(1, batch // k)
+        print(f"# rounding batch to {batch} (divisible by {k} agents)")
+
+    params = M.init_model(jax.random.key(0), model)
+    n_params = sum(x.size for x in jax.tree.leaves(params))
+    opt = optimizers.init(opt_cfg, params)
+    stream = synthetic.token_batches(synthetic.TokenStreamConfig(
+        vocab_size=model.vocab_size, seq_len=args.seq, batch_size=batch))
+
+    print(f"# arch={model.name} params={n_params/1e6:.1f}M agents={k} "
+          f"agg={par.aggregation} malicious={args.malicious}")
+    t0 = time.time()
+    losses = []
+    for i in range(args.steps):
+        hb = next(stream)
+        jb = {"tokens": jnp.asarray(hb["tokens"])}
+        if model.arch_type == "vlm":
+            jb["prefix"] = jnp.zeros(
+                (batch, model.num_prefix_tokens, model.d_model),
+                jnp.dtype(model.act_dtype))
+        if model.arch_type == "audio":
+            jb["frames"] = 0.02 * jax.random.normal(
+                jax.random.fold_in(jax.random.key(1), i),
+                (batch, model.num_prefix_tokens, model.d_model),
+                jnp.dtype(model.act_dtype))
+        params, opt, metrics = step(params, opt, jb)
+        losses.append(float(metrics["loss"]))
+        if i % args.log_every == 0 or i == args.steps - 1:
+            dt = (time.time() - t0) / (i + 1)
+            print(f"step {i:5d} loss {losses[-1]:.4f} "
+                  f"gnorm {float(metrics['grad_norm']):.3f} "
+                  f"{dt*1e3:.0f} ms/step", flush=True)
+    if args.checkpoint:
+        ckpt.save(args.checkpoint, params, step=args.steps)
+        print(f"# saved {args.checkpoint}")
+    print(f"# first-10 mean loss {np.mean(losses[:10]):.4f} -> "
+          f"last-10 mean {np.mean(losses[-10:]):.4f}")
+    return losses
+
+
+if __name__ == "__main__":
+    main()

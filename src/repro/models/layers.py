@@ -1,0 +1,333 @@
+"""Shared neural building blocks (pure functions, explicit params).
+
+Conventions:
+  * params are plain dicts of jnp arrays; init_* returns (params, key unused)
+  * stacked layers: leaves get a leading (L, ...) axis and are scanned
+  * activations run in ``cfg.act_dtype`` (bf16 in production configs),
+    params are float32 masters cast at use
+  * sharding is expressed through ``repro.launch.sharding.shard`` logical
+    constraints -- a no-op outside a mesh context, so all model code runs
+    unchanged on a single CPU device
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.launch.sharding import shard
+
+# ---------------------------------------------------------------------------
+# initializers / norms
+# ---------------------------------------------------------------------------
+
+def dense_init(key, shape, scale: Optional[float] = None, dtype=jnp.float32):
+    fan_in = shape[0] if len(shape) >= 2 else 1
+    if scale is None:
+        scale = fan_in ** -0.5
+    return scale * jax.random.normal(key, shape, dtype)
+
+
+def rms_norm(x, weight, eps: float):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * weight).astype(dt)
+
+
+def head_rms_norm(x, weight, eps: float):
+    """qk-norm: RMSNorm over the head_dim of (..., heads, head_dim)."""
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * weight).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float):
+    half = head_dim // 2
+    return theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (B, S, H, D), positions: (B, S) int32."""
+    half = x.shape[-1] // 2
+    freqs = rope_freqs(x.shape[-1], theta)                       # (half,)
+    ang = positions[..., None].astype(jnp.float32) * freqs       # (B, S, half)
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA + qk-norm + bias + sliding window + KV cache decode)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class AttnDims:
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    head_dim: int
+    qk_norm: bool
+    qkv_bias: bool
+    rope_theta: float
+    norm_eps: float
+    sliding_window: int = 0       # 0 = full causal
+    causal: bool = True           # False for encoder self-attention
+    q_chunk: int = 1024           # query-chunked attention for long seqs
+
+
+def init_attention(key, dims: AttnDims):
+    ks = jax.random.split(key, 4)
+    d, h, kv, hd = dims.d_model, dims.num_heads, dims.num_kv_heads, dims.head_dim
+    p = {
+        "wq": dense_init(ks[0], (d, h * hd)),
+        "wk": dense_init(ks[1], (d, kv * hd)),
+        "wv": dense_init(ks[2], (d, kv * hd)),
+        "wo": dense_init(ks[3], (h * hd, d)),
+    }
+    if dims.qkv_bias:
+        p["bq"] = jnp.zeros((h * hd,))
+        p["bk"] = jnp.zeros((kv * hd,))
+        p["bv"] = jnp.zeros((kv * hd,))
+    if dims.qk_norm:
+        p["q_norm"] = jnp.ones((hd,))
+        p["k_norm"] = jnp.ones((hd,))
+    return p
+
+
+def _project_qkv(p, x, dims: AttnDims, positions):
+    b, s, _ = x.shape
+    h, kv, hd = dims.num_heads, dims.num_kv_heads, dims.head_dim
+    dt = x.dtype
+    q = x @ p["wq"].astype(dt)
+    k = x @ p["wk"].astype(dt)
+    v = x @ p["wv"].astype(dt)
+    if dims.qkv_bias:
+        q = q + p["bq"].astype(dt)
+        k = k + p["bk"].astype(dt)
+        v = v + p["bv"].astype(dt)
+    q = q.reshape(b, s, h, hd)
+    k = k.reshape(b, s, kv, hd)
+    v = v.reshape(b, s, kv, hd)
+    if dims.qk_norm:
+        q = head_rms_norm(q, p["q_norm"].astype(dt), dims.norm_eps)
+        k = head_rms_norm(k, p["k_norm"].astype(dt), dims.norm_eps)
+    q = apply_rope(q, positions, dims.rope_theta)
+    k = apply_rope(k, positions, dims.rope_theta)
+    q = shard(q, "batch", "seq", "heads", None)
+    k = shard(k, "batch", "seq", "kv_heads", None)
+    v = shard(v, "batch", "seq", "kv_heads", None)
+    return q, k, v
+
+
+def _gqa_scores(q, k, dims: AttnDims):
+    """q: (B, Sq, H, D), k: (B, Sk, KV, D) -> (B, KV, G, Sq, Sk)."""
+    b, sq, h, hd = q.shape
+    kv = k.shape[2]
+    g = h // kv
+    qg = q.reshape(b, sq, kv, g, hd)
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qg, k) / (hd ** 0.5)
+    return scores
+
+
+def _gqa_out(probs, v):
+    """probs: (B, KV, G, Sq, Sk), v: (B, Sk, KV, D) -> (B, Sq, H*D)."""
+    b, kv, g, sq, _ = probs.shape
+    hd = v.shape[-1]
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs, v)
+    return out.reshape(b, sq, kv * g * hd)
+
+
+def _mask_bias(mask, dtype):
+    return jnp.where(mask, 0.0, jnp.finfo(jnp.float32).min).astype(jnp.float32)
+
+
+def attention_fwd(p, x, dims: AttnDims, positions,
+                  kv_positions=None, k_ext=None, v_ext=None):
+    """Full-sequence attention (train / prefill).
+
+    Query-chunked: scans over query blocks so the (Sq, Sk) score matrix
+    never materializes for more than ``q_chunk`` query rows (the TPU
+    flash-attention analogue, structured for compilability; a Pallas
+    flash kernel would fuse this further on real hardware).
+
+    Returns (out, (k, v)) so prefill can build the cache.
+    """
+    b, s, _ = x.shape
+    q, k, v = _project_qkv(p, x, dims, positions)
+    kpos = positions if kv_positions is None else kv_positions
+    dt = x.dtype
+
+    qc = min(dims.q_chunk, s)
+    while s % qc:
+        qc -= 1
+
+    def chunk_attn(carry, inputs):
+        q_blk, qpos_blk = inputs          # (B, qc, H, D), (B, qc)
+        scores = _gqa_scores(q_blk, k, dims).astype(jnp.float32)
+        mask = jnp.ones((b, 1, 1, qc, s), bool)
+        if dims.causal:
+            mask &= (kpos[:, None, None, None, :] <= qpos_blk[:, None, None, :, None])
+        if dims.sliding_window:
+            mask &= (kpos[:, None, None, None, :]
+                     > qpos_blk[:, None, None, :, None] - dims.sliding_window)
+        probs = jax.nn.softmax(scores + _mask_bias(mask, scores.dtype), axis=-1)
+        return carry, _gqa_out(probs.astype(dt), v)
+
+    if qc == s:
+        _, out = chunk_attn(None, (q, positions))
+    else:
+        n = s // qc
+        q_blocks = q.reshape(b, n, qc, dims.num_heads, dims.head_dim).swapaxes(0, 1)
+        p_blocks = positions.reshape(b, n, qc).swapaxes(0, 1)
+        # checkpoint the chunk: otherwise backward materializes ALL
+        # chunks' (B, KV, G, qc, S) f32 probs at once (multi-GiB)
+        _, outs = jax.lax.scan(jax.checkpoint(chunk_attn), None,
+                               (q_blocks, p_blocks))
+        out = outs.swapaxes(0, 1).reshape(b, s, -1)
+
+    out = out @ p["wo"].astype(dt)
+    return shard(out, "batch", "seq", "embed"), (k, v)
+
+
+def attention_decode(p, x, dims: AttnDims, cache: dict):
+    """One-token decode against a (possibly ring-buffer) KV cache.
+
+    cache = {"k": (B, S_c, KV, D), "v": ..., "pos": (B,) int32 next position}
+    Ring semantics when dims.sliding_window > 0 and S_c == window.
+    """
+    b = x.shape[0]
+    pos = cache["pos"]                                   # (B,)
+    q, k_new, v_new = _project_qkv(p, x, dims, pos[:, None])
+    s_c = cache["k"].shape[1]
+
+    if dims.sliding_window and s_c == dims.sliding_window:
+        slot = pos % dims.sliding_window
+    else:
+        slot = pos
+    bidx = jnp.arange(b)
+    k = cache["k"].at[bidx, slot].set(k_new[:, 0])
+    v = cache["v"].at[bidx, slot].set(v_new[:, 0])
+
+    # validity + causality mask over cache slots
+    slots = jnp.arange(s_c)[None, :]                     # (1, S_c)
+    if dims.sliding_window and s_c == dims.sliding_window:
+        kpos = cache_abs_positions(pos, s_c, dims.sliding_window)
+        age = pos[:, None] - kpos
+        valid = (age >= 0) & (age < dims.sliding_window) & (kpos >= 0)
+    else:
+        valid = slots <= pos[:, None]
+        kpos = slots * jnp.ones((b, 1), jnp.int32)
+
+    scores = _gqa_scores(q, k, dims).astype(jnp.float32)  # (B, KV, G, 1, S_c)
+    bias = _mask_bias(valid[:, None, None, None, :], scores.dtype)
+    probs = jax.nn.softmax(scores + bias, axis=-1)
+    out = _gqa_out(probs.astype(x.dtype), v) @ p["wo"].astype(x.dtype)
+    new_cache = {"k": k, "v": v, "pos": pos + 1}
+    return out, new_cache
+
+
+def cache_abs_positions(pos, s_c: int, window: int):
+    """Absolute positions stored in each ring slot given next-pos ``pos``.
+
+    Slot j holds the most recent absolute position p with p % window == j
+    and p <= pos (after the current write at slot pos%window).
+    """
+    slots = jnp.arange(s_c)[None, :]
+    cur = pos[:, None]
+    delta = (cur - slots) % window
+    return cur - delta
+
+
+def init_kv_cache(batch: int, cfg_dims: AttnDims, max_len: int, dtype):
+    s_c = min(max_len, cfg_dims.sliding_window) if cfg_dims.sliding_window else max_len
+    kv, hd = cfg_dims.num_kv_heads, cfg_dims.head_dim
+    return {
+        "k": jnp.zeros((batch, s_c, kv, hd), dtype),
+        "v": jnp.zeros((batch, s_c, kv, hd), dtype),
+        "pos": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Cross-attention (encoder-decoder)
+# ---------------------------------------------------------------------------
+
+def cross_attention_fwd(p, x, enc_k, enc_v, dims: AttnDims, positions):
+    """Decoder cross-attn: q from x, fixed (precomputed) encoder k/v.
+
+    Query-chunked like self-attention: the (Sq, Sk) score tensor for a
+    4k-decoder x 1k-encoder block at batch 16 is multi-GB in f32 if
+    materialized whole (observed 127 GiB/device on seamless train)."""
+    b, s, _ = x.shape
+    dt = x.dtype
+    h, kv, hd = dims.num_heads, dims.num_kv_heads, dims.head_dim
+    q = (x @ p["wq"].astype(dt)).reshape(b, s, h, hd)
+    if dims.qk_norm:
+        q = head_rms_norm(q, p["q_norm"].astype(dt), dims.norm_eps)
+    q = shard(q, "batch", "seq", "heads", None)
+
+    qc = min(dims.q_chunk, s)
+    while s % qc:
+        qc -= 1
+
+    def chunk_attn(carry, q_blk):
+        scores = _gqa_scores(q_blk, enc_k, dims).astype(jnp.float32)
+        probs = jax.nn.softmax(scores, axis=-1)
+        return carry, _gqa_out(probs.astype(dt), enc_v)
+
+    if qc == s:
+        _, out = chunk_attn(None, q)
+    else:
+        n = s // qc
+        q_blocks = q.reshape(b, n, qc, h, hd).swapaxes(0, 1)
+        _, outs = jax.lax.scan(jax.checkpoint(chunk_attn), None, q_blocks)
+        out = outs.swapaxes(0, 1).reshape(b, s, -1)
+    return out @ p["wo"].astype(dt)
+
+
+def project_enc_kv(p, enc_out, dims: AttnDims):
+    b, s, _ = enc_out.shape
+    dt = enc_out.dtype
+    kv, hd = dims.num_kv_heads, dims.head_dim
+    k = (enc_out @ p["wk"].astype(dt)).reshape(b, s, kv, hd)
+    v = (enc_out @ p["wv"].astype(dt)).reshape(b, s, kv, hd)
+    if dims.qk_norm:
+        k = head_rms_norm(k, p["k_norm"].astype(dt), dims.norm_eps)
+    return k, v
+
+
+# ---------------------------------------------------------------------------
+# MLP (gated SwiGLU or plain GELU)
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, d_model: int, d_ff: int, gated: bool):
+    ks = jax.random.split(key, 3)
+    p = {
+        "w_up": dense_init(ks[0], (d_model, d_ff)),
+        "w_down": dense_init(ks[1], (d_ff, d_model)),
+    }
+    if gated:
+        p["w_gate"] = dense_init(ks[2], (d_model, d_ff))
+    return p
+
+
+def mlp_fwd(p, x, gated: bool):
+    dt = x.dtype
+    h = x @ p["w_up"].astype(dt)
+    if gated:
+        h = jax.nn.silu(x @ p["w_gate"].astype(dt)) * h
+    else:
+        h = jax.nn.gelu(h)
+    h = shard(h, "batch", "seq", "mlp")
+    out = h @ p["w_down"].astype(dt)
+    return shard(out, "batch", "seq", "embed")

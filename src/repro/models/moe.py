@@ -1,0 +1,88 @@
+"""Mixture-of-Experts FFN: top-k router + GShard-style capacity dispatch.
+
+Einsum/one-hot dispatch (no ragged ops) so the layer lowers cleanly
+under GSPMD; the expert dimension carries an ``experts`` logical axis,
+so experts shard over the mesh's model axis (expert parallelism) and
+the dispatch einsum lowers to the expected all-to-all.
+
+Tokens are routed in groups (``group_size``) with per-group expert
+capacity ``ceil(group * k / E * capacity_factor)`` -- overflow tokens
+drop (standard Switch/GShard semantics).  The router aux loss is the
+usual load-balance term: E * sum_e f_e * p_e.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.launch.sharding import shard
+from repro.models.layers import dense_init
+
+
+def init_moe(key, d_model: int, d_ff: int, num_experts: int, gated: bool = True):
+    ks = jax.random.split(key, 4)
+    p = {
+        "router": dense_init(ks[0], (d_model, num_experts)),
+        "w_up": dense_init(ks[1], (num_experts, d_model, d_ff)),
+        "w_down": dense_init(ks[2], (num_experts, d_ff, d_model)),
+    }
+    if gated:
+        p["w_gate"] = dense_init(ks[3], (num_experts, d_model, d_ff))
+    return p
+
+
+def moe_fwd(p, x, *, num_experts: int, top_k: int, gated: bool = True,
+            group_size: int = 512, capacity_factor: float = 1.25):
+    """x: (B, S, D) -> (out (B, S, D), aux_loss scalar)."""
+    b, s, d = x.shape
+    dt = x.dtype
+    e, k = num_experts, top_k
+
+    g_sz = min(group_size, s)
+    while s % g_sz:
+        g_sz -= 1
+    n_groups = (b * s) // g_sz
+    xg = x.reshape(n_groups, g_sz, d)
+
+    logits = (xg @ p["router"].astype(dt)).astype(jnp.float32)   # (G, Sg, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_i = jax.lax.top_k(probs, k)                       # (G, Sg, K)
+    top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)       # renormalize
+
+    # load-balance aux loss (computed on the full softmax)
+    density = jnp.mean(
+        jax.nn.one_hot(top_i[..., 0], e, dtype=jnp.float32), axis=(0, 1))
+    mean_prob = jnp.mean(probs, axis=(0, 1))
+    aux = e * jnp.sum(density * mean_prob)
+
+    cap = int(g_sz * k / e * capacity_factor) + 1
+
+    # position of each (token, choice) within its expert's capacity buffer
+    onehot = jax.nn.one_hot(top_i, e, dtype=jnp.int32)           # (G, Sg, K, E)
+    flat = onehot.reshape(n_groups, g_sz * k, e)
+    pos = jnp.cumsum(flat, axis=1) - 1                           # (G, Sg*K, E)
+    pos = pos.reshape(n_groups, g_sz, k, e)
+    within_cap = (pos < cap) & (onehot > 0)
+
+    # dispatch: (G, Sg, K, E, C) one-hot -> too big; contract k on the fly.
+    pos_oh = jax.nn.one_hot(pos, cap, dtype=dt) * within_cap[..., None].astype(dt)
+    # (G, Sg, K, E, C)
+    dispatch = jnp.sum(pos_oh, axis=2)                           # (G, Sg, E, C)
+    combine = jnp.sum(pos_oh * top_p[..., None, None].astype(dt), axis=2)
+
+    xe = jnp.einsum("gsec,gsd->gecd", dispatch, xg)              # (G, E, C, D)
+    xe = shard(xe, None, "experts", None, None)
+
+    h = jnp.einsum("gecd,edf->gecf", xe, p["w_up"].astype(dt))
+    if gated:
+        gate = jnp.einsum("gecd,edf->gecf", xe, p["w_gate"].astype(dt))
+        h = jax.nn.silu(gate) * h
+    else:
+        h = jax.nn.gelu(h)
+    h = shard(h, None, "experts", None, None)
+    ye = jnp.einsum("gecf,efd->gecd", h, p["w_down"].astype(dt))
+    ye = shard(ye, None, "experts", None, None)
+
+    out = jnp.einsum("gecd,gsec->gsd", ye, combine)
+    return out.reshape(b, s, d), aux

@@ -1,0 +1,309 @@
+"""Attention-free sequence mixers: Mamba2 (SSD) and RWKV6 (Finch).
+
+Both are implemented in *chunked* form: a lax.scan over chunks carries
+the recurrent state, and within a chunk the contribution is computed
+with dense einsums using cumulative log-decay differences.  All decay
+exponents are differences lw_t - lw_s with s <= t, hence <= 0 -- no
+overflow for any decay strength.  Decode steps are the exact one-token
+recurrences.
+
+TPU adaptation: the chunked formulation turns the sequential recurrence
+into MXU-shaped matmuls of size (chunk x chunk) and (chunk x state) --
+this is the standard way SSDs map to systolic hardware, in contrast to
+the warp-level scan kernels used on GPU.
+
+Simplifications vs. the reference implementations (documented in
+DESIGN.md): RWKV6 keeps the data-dependent per-channel decay (the
+Finch headline feature) but uses static token-shift interpolation
+(RWKV5-style) instead of the full ddlerp LoRA stack; Mamba2 uses a
+single B/C group.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.launch.sharding import shard
+from repro.models.layers import dense_init, rms_norm
+
+
+# ===========================================================================
+# Mamba2 (SSD)
+# ===========================================================================
+
+def mamba2_dims(d_model: int, expand: int, head_dim: int, d_state: int):
+    d_inner = expand * d_model
+    n_heads = d_inner // head_dim
+    return d_inner, n_heads
+
+
+def init_mamba2(key, d_model: int, *, expand: int, head_dim: int,
+                d_state: int, d_conv: int):
+    d_inner, n_heads = mamba2_dims(d_model, expand, head_dim, d_state)
+    ks = jax.random.split(key, 5)
+    proj_out = 2 * d_inner + 2 * d_state + n_heads  # z, x, B, C, dt
+    return {
+        "in_proj": dense_init(ks[0], (d_model, proj_out)),
+        "conv_w": 0.1 * jax.random.normal(ks[1], (d_conv, d_inner + 2 * d_state)),
+        "conv_b": jnp.zeros((d_inner + 2 * d_state,)),
+        "a_log": jnp.log(jnp.linspace(1.0, float(n_heads), n_heads)),
+        "dt_bias": jnp.zeros((n_heads,)),
+        "d_skip": jnp.ones((n_heads,)),
+        "out_norm": jnp.ones((d_inner,)),
+        "out_proj": dense_init(ks[2], (d_inner, d_model)),
+    }
+
+
+def _mamba2_split(p, x, cfg):
+    d_inner, n_heads = mamba2_dims(cfg.d_model, cfg.ssm_expand,
+                                   cfg.ssm_head_dim, cfg.ssm_state)
+    n = cfg.ssm_state
+    dt_ = x.dtype
+    zxbcdt = x @ p["in_proj"].astype(dt_)
+    z = zxbcdt[..., :d_inner]
+    xbc = zxbcdt[..., d_inner:d_inner + d_inner + 2 * n]
+    dt = zxbcdt[..., -n_heads:]
+    return z, xbc, dt, d_inner, n_heads, n
+
+
+def _causal_conv(xbc, w, b, conv_state=None):
+    """Depthwise causal conv along time.  xbc: (B, S, C), w: (W, C)."""
+    width = w.shape[0]
+    if conv_state is None:
+        pad = jnp.zeros(xbc.shape[:1] + (width - 1,) + xbc.shape[2:], xbc.dtype)
+    else:
+        pad = conv_state.astype(xbc.dtype)
+    xp = jnp.concatenate([pad, xbc], axis=1)
+    out = sum(xp[:, i:i + xbc.shape[1]] * w[i][None, None] for i in range(width))
+    new_state = xp[:, -(width - 1):] if width > 1 else pad[:, :0]
+    return out + b[None, None], new_state
+
+
+def mamba2_fwd(p, x, cfg, conv_state=None, ssm_state=None):
+    """Full-sequence SSD.  x: (B, S, D) -> (y, (conv_state, ssm_state))."""
+    b, s, _ = x.shape
+    dt_ = x.dtype
+    z, xbc, dt, d_inner, n_heads, n = _mamba2_split(p, x, cfg)
+    z = shard(z, "batch", "seq", "mlp")
+    hd = cfg.ssm_head_dim
+
+    xbc, conv_out = _causal_conv(xbc, p["conv_w"].astype(dt_),
+                                 p["conv_b"].astype(dt_), conv_state)
+    xbc = jax.nn.silu(xbc)
+    xs = xbc[..., :d_inner].reshape(b, s, n_heads, hd)
+    xs = shard(xs, "batch", "seq", "heads", None)
+    bs = xbc[..., d_inner:d_inner + n]                     # (B, S, N)
+    cs = xbc[..., d_inner + n:]                            # (B, S, N)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"][None, None])
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))           # (H,)
+    log_decay = dt * a[None, None]                         # (B, S, H)  <= 0
+    log_decay = shard(log_decay, "batch", "seq", "heads")
+    xbar = xs * dt.astype(dt_)[..., None]                  # (B, S, H, hd)
+    xbar = shard(xbar, "batch", "seq", "heads", None)
+
+    lc = min(cfg.chunk_size, s)
+    while s % lc:
+        lc -= 1
+    nc = s // lc
+
+    def to_chunks(t):
+        return t.reshape((b, nc, lc) + t.shape[2:]).swapaxes(0, 1)
+
+    xb_c, b_c, c_c, ld_c = map(to_chunks, (xbar, bs, cs, log_decay))
+
+    if ssm_state is None:
+        ssm_state = jnp.zeros((b, n_heads, hd, n), jnp.float32)
+
+    def chunk(body_state, inp):
+        xb, bb, cc, ld = inp                               # per-chunk slices
+        cum = jnp.cumsum(ld, axis=1)                       # (B, L, H) incl.
+        total = cum[:, -1]                                 # (B, H)
+        # inter-chunk: y_t += exp(cum_t) * C_t . S_in
+        y_in = jnp.einsum("bln,bhpn->blhp", cc.astype(jnp.float32),
+                          body_state) * jnp.exp(cum)[..., None]
+        # intra-chunk: G(t,s) = C_t.B_s * exp(cum_t - cum_s), s <= t
+        cb = jnp.einsum("bln,bmn->blm", cc.astype(jnp.float32),
+                        bb.astype(jnp.float32))            # (B, L, L)
+        dec = jnp.exp(cum[:, :, None] - cum[:, None, :])   # (B, L, L, H)
+        dec = shard(dec, "batch", None, None, "heads")
+        mask = jnp.tril(jnp.ones((lc, lc), bool))
+        g = jnp.where(mask[None, :, :, None], cb[..., None] * dec, 0.0)
+        g = shard(g, "batch", None, None, "heads")
+        y_intra = jnp.einsum("blmh,bmhp->blhp", g, xb.astype(jnp.float32))
+        # state update: S_out = exp(total) S_in + sum_s exp(total - cum_s) B_s xb_s
+        w_s = jnp.exp(total[:, None] - cum)                # (B, L, H)
+        ds = jnp.einsum("blhp,bln,blh->bhpn", xb.astype(jnp.float32),
+                        bb.astype(jnp.float32), w_s)
+        s_out = jnp.exp(total)[:, :, None, None] * body_state + ds
+        return s_out, (y_in + y_intra).astype(dt_)
+
+    ssm_state, ys = jax.lax.scan(chunk, ssm_state, (xb_c, b_c, c_c, ld_c))
+    y = ys.swapaxes(0, 1).reshape(b, s, n_heads, hd)
+    y = y + xs * p["d_skip"].astype(dt_)[None, None, :, None]
+    y = y.reshape(b, s, d_inner)
+    y = rms_norm(y, p["out_norm"].astype(dt_), 1e-5) * jax.nn.silu(z)
+    y = shard(y, "batch", "seq", "mlp")
+    return y @ p["out_proj"].astype(dt_), (conv_out, ssm_state)
+
+
+def mamba2_decode(p, x, cfg, conv_state, ssm_state):
+    """One-token step.  x: (B, 1, D)."""
+    y, (conv_state, ssm_state) = mamba2_fwd(
+        p, x, dataclasses_replace_chunk(cfg), conv_state, ssm_state)
+    return y, (conv_state, ssm_state)
+
+
+def dataclasses_replace_chunk(cfg):
+    import dataclasses
+    return dataclasses.replace(cfg, chunk_size=1)
+
+
+def init_mamba2_state(batch: int, cfg, dtype):
+    d_inner, n_heads = mamba2_dims(cfg.d_model, cfg.ssm_expand,
+                                   cfg.ssm_head_dim, cfg.ssm_state)
+    conv = jnp.zeros((batch, cfg.ssm_conv - 1, d_inner + 2 * cfg.ssm_state), dtype)
+    ssm = jnp.zeros((batch, n_heads, cfg.ssm_head_dim, cfg.ssm_state), jnp.float32)
+    return conv, ssm
+
+
+# ===========================================================================
+# RWKV6 (Finch)
+# ===========================================================================
+
+def rwkv6_heads(d_model: int, head_dim: int) -> int:
+    return d_model // head_dim
+
+
+def init_rwkv6_timemix(key, d_model: int, head_dim: int, decay_lora: int = 64):
+    h = rwkv6_heads(d_model, head_dim)
+    ks = jax.random.split(key, 8)
+    return {
+        "mu_r": 0.5 * jnp.ones((d_model,)),
+        "mu_k": 0.5 * jnp.ones((d_model,)),
+        "mu_v": 0.5 * jnp.ones((d_model,)),
+        "mu_g": 0.5 * jnp.ones((d_model,)),
+        "mu_w": 0.5 * jnp.ones((d_model,)),
+        "wr": dense_init(ks[0], (d_model, d_model)),
+        "wk": dense_init(ks[1], (d_model, d_model)),
+        "wv": dense_init(ks[2], (d_model, d_model)),
+        "wg": dense_init(ks[3], (d_model, d_model)),
+        "wo": dense_init(ks[4], (d_model, d_model)),
+        # data-dependent decay (Finch): w = exp(-exp(w0 + tanh(x A) B))
+        "w0": -6.0 * jnp.ones((d_model,)) + 0.5,
+        "w_a": dense_init(ks[5], (d_model, decay_lora), scale=1e-2),
+        "w_b": dense_init(ks[6], (decay_lora, d_model), scale=1e-2),
+        "bonus": jnp.zeros((h, head_dim)),
+        "ln_w": jnp.ones((d_model,)),
+    }
+
+
+def _token_shift(x, mu, last):
+    """lerp(x_t, x_{t-1}, mu); ``last`` (B, 1, D) is the token before x[0]."""
+    prev = jnp.concatenate([last, x[:, :-1]], axis=1)
+    return x + (prev - x) * mu[None, None].astype(x.dtype)
+
+
+def rwkv6_timemix(p, x, head_dim: int, chunk_size: int,
+                  last_x=None, state=None):
+    """x: (B, S, D) -> (out, (last_x, state)).  state: (B, H, hd, hd) f32
+    with layout state[i, j] accumulating k_i * v_j."""
+    b, s, d = x.shape
+    h = rwkv6_heads(d, head_dim)
+    hd = head_dim
+    dt_ = x.dtype
+    if last_x is None:
+        last_x = jnp.zeros((b, 1, d), dt_)
+
+    xr = _token_shift(x, p["mu_r"], last_x)
+    xk = _token_shift(x, p["mu_k"], last_x)
+    xv = _token_shift(x, p["mu_v"], last_x)
+    xg = _token_shift(x, p["mu_g"], last_x)
+    xw = _token_shift(x, p["mu_w"], last_x)
+
+    r = (xr @ p["wr"].astype(dt_)).reshape(b, s, h, hd)
+    k = (xk @ p["wk"].astype(dt_)).reshape(b, s, h, hd)
+    v = (xv @ p["wv"].astype(dt_)).reshape(b, s, h, hd)
+    g = jax.nn.silu(xg @ p["wg"].astype(dt_))
+    r = shard(r, "batch", "seq", "heads", None)
+    k = shard(k, "batch", "seq", "heads", None)
+    v = shard(v, "batch", "seq", "heads", None)
+
+    # Finch decay, per channel and per step: log w in (-inf, 0)
+    dec = p["w0"][None, None] + jnp.tanh(
+        xw.astype(jnp.float32) @ p["w_a"].astype(jnp.float32)
+    ) @ p["w_b"].astype(jnp.float32)
+    log_w = -jnp.exp(dec).astype(jnp.float32)              # (B, S, D) <= 0
+    log_w = log_w.reshape(b, s, h, hd)
+
+    lc = min(chunk_size, s)
+    while s % lc:
+        lc -= 1
+    nc = s // lc
+
+    def to_chunks(t):
+        return t.reshape((b, nc, lc) + t.shape[2:]).swapaxes(0, 1)
+
+    r_c, k_c, v_c, lw_c = map(to_chunks, (r, k, v, log_w))
+    if state is None:
+        state = jnp.zeros((b, h, hd, hd), jnp.float32)
+    u = p["bonus"].astype(jnp.float32)                     # (H, hd)
+
+    def chunk(st, inp):
+        rr, kk, vv, lw = inp                               # (B, L, H, hd) each
+        rr32, kk32, vv32 = (t.astype(jnp.float32) for t in (rr, kk, vv))
+        cum = jnp.cumsum(lw, axis=1)                       # inclusive (B,L,H,hd)
+        cum_ex = cum - lw                                  # exclusive = lw_{t-1}
+        # carry-in: out_t += sum_i r_t,i exp(cum_ex_t,i) S[i, :]
+        rt = rr32 * jnp.exp(cum_ex)
+        y_in = jnp.einsum("blhi,bhij->blhj", rt, st)
+        # intra (strictly past): factor(t,s,i) = exp(cum_ex_t,i - cum_s,i)
+        fac = jnp.exp(cum_ex[:, :, None] - cum[:, None, :])   # (B,L,L,H,hd)
+        mask = jnp.tril(jnp.ones((lc, lc), bool), k=-1)
+        a_ts = jnp.einsum("blhi,bmhi,blmhi->blmh", rr32, kk32,
+                          jnp.where(mask[None, :, :, None, None], fac, 0.0))
+        y_intra = jnp.einsum("blmh,bmhj->blhj", a_ts, vv32)
+        # bonus (current token)
+        y_bonus = jnp.einsum("blhi,blhi,blhj->blhj",
+                             rr32, kk32 * u[None, None], vv32)
+        # state update
+        total = cum[:, -1]                                  # (B, H, hd)
+        w_s = jnp.exp(total[:, None] - cum)                 # (B, L, H, hd)
+        ds = jnp.einsum("blhi,blhj->bhij", kk32 * w_s, vv32)
+        st_out = jnp.exp(total)[..., None] * st + ds
+        return st_out, (y_in + y_intra + y_bonus).astype(dt_)
+
+    state, ys = jax.lax.scan(chunk, state, (r_c, k_c, v_c, lw_c))
+    y = ys.swapaxes(0, 1).reshape(b, s, d)
+    # per-head group norm (approximated by rms over head dim), then gate
+    y = y.reshape(b, s, h, hd)
+    y = y * jax.lax.rsqrt(jnp.mean(
+        y.astype(jnp.float32) ** 2, axis=-1, keepdims=True) + 1e-5).astype(dt_)
+    y = y.reshape(b, s, d) * p["ln_w"].astype(dt_) * g
+    out = y @ p["wo"].astype(dt_)
+    return out, (x[:, -1:], state)
+
+
+def init_rwkv6_channelmix(key, d_model: int, d_ff: int):
+    ks = jax.random.split(key, 3)
+    return {
+        "mu_k": 0.5 * jnp.ones((d_model,)),
+        "mu_r": 0.5 * jnp.ones((d_model,)),
+        "wk": dense_init(ks[0], (d_model, d_ff)),
+        "wv": dense_init(ks[1], (d_ff, d_model)),
+        "wr": dense_init(ks[2], (d_model, d_model)),
+    }
+
+
+def rwkv6_channelmix(p, x, last_x=None):
+    b, s, d = x.shape
+    dt_ = x.dtype
+    if last_x is None:
+        last_x = jnp.zeros((b, 1, d), dt_)
+    xk = _token_shift(x, p["mu_k"], last_x)
+    xr = _token_shift(x, p["mu_r"], last_x)
+    k = jnp.square(jax.nn.relu(xk @ p["wk"].astype(dt_)))
+    k = shard(k, "batch", "seq", "mlp")
+    out = jax.nn.sigmoid(xr @ p["wr"].astype(dt_)) * (k @ p["wv"].astype(dt_))
+    return out, x[:, -1:]

@@ -1,0 +1,131 @@
+"""Hand-rolled optimizers (optax is not available in this container).
+
+Pytree-native SGD / momentum / Adam(W) with the usual (init, update)
+pair.  States are pytrees with the same structure as the params, so
+they shard identically (critical for the FSDP path).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    name: str = "adam"
+    learning_rate: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    momentum: float = 0.9
+    grad_clip: float = 1.0      # global-norm clip; 0 disables
+    warmup_steps: int = 100
+    total_steps: int = 10_000   # cosine decay horizon
+    state_dtype: str = "float32"  # adam m/v storage ("bfloat16" halves the
+                                  # optimizer footprint; update math stays f32)
+
+
+class AdamState(NamedTuple):
+    step: jnp.ndarray
+    m: dict
+    v: dict
+
+
+class MomentumState(NamedTuple):
+    step: jnp.ndarray
+    m: dict
+
+
+class SGDState(NamedTuple):
+    step: jnp.ndarray
+
+
+def schedule(cfg: OptimizerConfig, step):
+    """Linear warmup + cosine decay to 10%."""
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(1.0, (step + 1.0) / max(cfg.warmup_steps, 1))
+    frac = jnp.clip((step - cfg.warmup_steps)
+                    / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.1 + 0.45 * (1.0 + jnp.cos(jnp.pi * frac))
+    return cfg.learning_rate * warm * cos
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    if max_norm <= 0:
+        return grads
+    norm = global_norm(grads)
+    factor = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * factor).astype(g.dtype),
+                        grads)
+
+
+def init(cfg: OptimizerConfig, params):
+    sdt = jnp.dtype(cfg.state_dtype)
+    z = lambda: jax.tree.map(lambda p: jnp.zeros_like(p, dtype=sdt), params)
+    step = jnp.zeros((), jnp.int32)
+    if cfg.name == "adam":
+        return AdamState(step, z(), z())
+    if cfg.name == "momentum":
+        return MomentumState(step, z())
+    if cfg.name == "sgd":
+        return SGDState(step)
+    raise ValueError(f"unknown optimizer {cfg.name!r}")
+
+
+def update(cfg: OptimizerConfig, params, grads, state):
+    """Returns (new_params, new_state)."""
+    grads = clip_by_global_norm(grads, cfg.grad_clip)
+    lr = schedule(cfg, state.step)
+
+    if cfg.name == "adam":
+        t = state.step + 1
+        tf = t.astype(jnp.float32)
+        b1, b2 = cfg.beta1, cfg.beta2
+        sdt = jnp.dtype(cfg.state_dtype)
+        m = jax.tree.map(
+            lambda mi, g: (b1 * mi.astype(jnp.float32)
+                           + (1 - b1) * g.astype(jnp.float32)).astype(sdt),
+            state.m, grads)
+        v = jax.tree.map(
+            lambda vi, g: (b2 * vi.astype(jnp.float32) + (1 - b2)
+                           * jnp.square(g.astype(jnp.float32))).astype(sdt),
+            state.v, grads)
+        mhat_s = 1.0 / (1 - b1 ** tf)
+        vhat_s = 1.0 / (1 - b2 ** tf)
+
+        def upd(p, mi, vi):
+            mi, vi = mi.astype(jnp.float32), vi.astype(jnp.float32)
+            step_ = lr * (mi * mhat_s) / (jnp.sqrt(vi * vhat_s) + cfg.eps)
+            if cfg.weight_decay:
+                step_ = step_ + lr * cfg.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - step_).astype(p.dtype)
+
+        new_params = jax.tree.map(upd, params, m, v)
+        return new_params, AdamState(t, m, v)
+
+    if cfg.name == "momentum":
+        m = jax.tree.map(lambda mi, g: cfg.momentum * mi + g.astype(jnp.float32),
+                         state.m, grads)
+        new_params = jax.tree.map(
+            lambda p, mi: (p.astype(jnp.float32) - lr * mi).astype(p.dtype),
+            params, m)
+        return new_params, MomentumState(state.step + 1, m)
+
+    if cfg.name == "sgd":
+        new_params = jax.tree.map(
+            lambda p, g: (p.astype(jnp.float32)
+                          - lr * g.astype(jnp.float32)).astype(p.dtype),
+            params, grads)
+        return new_params, SGDState(state.step + 1)
+
+    raise ValueError(cfg.name)

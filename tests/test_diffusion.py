@@ -1,0 +1,128 @@
+"""REF-Diffusion (Algorithm 1) + federated variant behaviour tests."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import attacks, diffusion, federated, graph
+from repro.data import synthetic
+
+PROB = synthetic.LinearModelProblem(dim=10, noise_var=0.01)
+
+
+def run(agg, n_mal=0, delta=1000.0, iters=400, k=16, topology=None, mu=0.05):
+    adj = topology if topology is not None else graph.fully_connected(k)
+    comb = graph.uniform_weights(adj)
+    byz = attacks.ByzantineConfig(
+        num_malicious=n_mal, attack="additive",
+        attack_kwargs=(("delta", delta),))
+    cfg = diffusion.DiffusionConfig(step_size=mu, aggregator=agg, byzantine=byz)
+    _, hist = diffusion.run_diffusion(
+        grad_fn=PROB.grad_fn(), combination=comb, config=cfg,
+        w_star=PROB.w_star, num_iters=iters, key=jax.random.key(0))
+    return float(hist[-1])
+
+
+def test_clean_convergence_all_aggregators():
+    for agg in ("mean", "median", "mm_tukey"):
+        msd = run(agg, n_mal=0)
+        assert msd < 1e-2, (agg, msd)
+
+
+def test_mean_breaks_down_single_attacker():
+    msd = run("mean", n_mal=1)
+    assert msd > 1e2     # catastrophic
+
+
+def test_ref_robust_single_attacker():
+    msd = run("mm_tukey", n_mal=1)
+    assert msd < 1e-2, msd
+
+
+def test_median_robust_but_less_efficient():
+    clean_med = run("median", n_mal=0, iters=600)
+    clean_ref = run("mm_tukey", n_mal=0, iters=600)
+    # both converge; REF reaches a lower steady-state MSD (efficiency)
+    assert clean_med < 1e-2 and clean_ref < 1e-2
+    assert clean_ref < clean_med * 1.05
+
+
+def test_ref_robust_up_to_high_contamination():
+    # 5/16 ~ 31% malicious
+    msd = run("mm_tukey", n_mal=5)
+    assert msd < 5e-2, msd
+
+
+def test_ring_topology_converges():
+    adj = graph.ring(16, hops=2)
+    msd = run("mm_tukey", n_mal=0, topology=adj, iters=800)
+    assert msd < 5e-2, msd
+
+
+def test_rank_based_rejects_sparse_graph():
+    adj = graph.ring(8)
+    comb = graph.uniform_weights(adj)
+    cfg = diffusion.DiffusionConfig(aggregator="trimmed_mean")
+    with pytest.raises(ValueError):
+        diffusion.check_compatible(cfg, comb)
+
+
+def test_msd_metric():
+    w = jnp.zeros((4, 3))
+    w_star = jnp.ones((3,))
+    benign = jnp.array([True, True, True, False])
+    assert float(diffusion.msd(w, w_star, benign)) == pytest.approx(3.0)
+
+
+def test_federated_clean_and_attacked():
+    byz = attacks.ByzantineConfig(
+        num_malicious=4, attack="additive", attack_kwargs=(("delta", 1000.0),))
+    grad = lambda w, idx, key: _fed_grad(w, idx, key)
+    for agg, n_mal, bound in (("mean", 0, 1e-2), ("mm_tukey", 0, 1e-2),
+                              ("mm_tukey", 4, 5e-2)):
+        cfg = federated.FederatedConfig(
+            num_clients=32, clients_per_round=16, local_steps=3,
+            step_size=0.05, aggregator=agg,
+            byzantine=byz if n_mal else attacks.ByzantineConfig())
+        _, hist = federated.run_federated(
+            grad_fn=grad, config=cfg, w_star=PROB.w_star,
+            num_rounds=150, key=jax.random.key(1))
+        assert float(hist[-1]) < bound, (agg, n_mal, float(hist[-1]))
+
+
+def _fed_grad(w, idx, key):
+    ku, kv = jax.random.split(jax.random.fold_in(key, idx))
+    u = jax.random.normal(ku, (10,))
+    d = u @ PROB.w_star + 0.1 * jax.random.normal(kv, ())
+    return -u * (d - u @ w)
+
+
+def test_graph_utilities():
+    for adj in (graph.fully_connected(8), graph.ring(8), graph.grid(3, 3),
+                graph.erdos_renyi(12, 0.4)):
+        assert graph.is_connected(adj)
+        a = graph.uniform_weights(adj)
+        graph.validate_combination_matrix(a)
+        m = graph.metropolis_weights(adj)
+        graph.validate_combination_matrix(m)
+        # metropolis is doubly stochastic
+        np.testing.assert_allclose(m.sum(axis=1), 1.0, atol=1e-8)
+
+
+def test_attacks_registry():
+    x = jnp.ones((8, 5))
+    mask = jnp.arange(8) >= 6
+    for name in attacks.names():
+        fn = attacks.get_attack(name)
+        out = fn(x, mask, jax.random.key(0), 0)
+        assert out.shape == x.shape
+        np.testing.assert_allclose(out[:6], 1.0)   # benign untouched
+
+
+def test_local_attacks():
+    g = {"w": jnp.ones((3, 3))}
+    out = attacks.apply_local(g, jnp.asarray(True), "additive", {"delta": 5.0})
+    np.testing.assert_allclose(out["w"], 6.0)
+    out = attacks.apply_local(g, jnp.asarray(False), "sign_flip", {})
+    np.testing.assert_allclose(out["w"], 1.0)

@@ -1,0 +1,116 @@
+"""Unit tests: loss families and elementwise location estimation."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import location, mestimators
+
+
+def test_loss_registry():
+    for name in ("quadratic", "absolute", "huber", "tukey"):
+        fam = mestimators.get_loss(name)
+        y = jnp.linspace(-10, 10, 101)
+        assert jnp.all(jnp.isfinite(fam.rho(y)))
+        assert jnp.all(jnp.isfinite(fam.psi(y)))
+        assert jnp.all(jnp.isfinite(fam.weight(y)))
+    with pytest.raises(ValueError):
+        mestimators.get_loss("nope")
+
+
+def test_psi_is_rho_derivative():
+    y = jnp.linspace(-8.0, 8.0, 400)
+    for name in ("quadratic", "huber", "tukey"):
+        fam = mestimators.get_loss(name)
+        num = jax.vmap(jax.grad(lambda v: fam.rho(v)))(y)
+        np.testing.assert_allclose(num, fam.psi(y), atol=1e-4)
+
+
+def test_tukey_redescends():
+    fam = mestimators.TUKEY
+    y = jnp.array([5.0, 10.0, 100.0])   # beyond c = 4.685
+    np.testing.assert_allclose(fam.psi(y), 0.0)
+    np.testing.assert_allclose(fam.weight(y), 0.0)
+
+
+def test_weight_consistent_with_psi():
+    y = jnp.array([-3.0, -0.5, 0.3, 1.0, 4.0])
+    for name in ("huber", "tukey"):
+        fam = mestimators.get_loss(name)
+        np.testing.assert_allclose(fam.weight(y) * y, fam.psi(y), atol=1e-6)
+
+
+def test_median_matches_numpy(rng):
+    for k in (3, 4, 7, 16, 33):
+        x = rng.normal(size=(k, 50)).astype(np.float32)
+        got = location.median(jnp.asarray(x), axis=0)
+        np.testing.assert_allclose(got, np.median(x, axis=0), atol=1e-6)
+
+
+def test_mad_matches_numpy(rng):
+    x = rng.normal(size=(21, 40)).astype(np.float32)
+    got = location.mad(jnp.asarray(x), axis=0)
+    want = 1.4826022185056018 * np.median(
+        np.abs(x - np.median(x, axis=0)), axis=0)
+    np.testing.assert_allclose(got, want, rtol=1e-5)
+
+
+def test_weighted_median_uniform_equals_median(rng):
+    x = jnp.asarray(rng.normal(size=(9, 30)).astype(np.float32))
+    a = jnp.ones((9,)) / 9
+    got = location.weighted_median(x, a)
+    want = location.median(x, axis=0)
+    # weighted median picks an order statistic; for odd K they agree
+    np.testing.assert_allclose(got, want, atol=1e-6)
+
+
+def test_weighted_median_zero_weight_excludes(rng):
+    x = jnp.asarray(rng.normal(size=(8, 20)).astype(np.float32))
+    x = x.at[-1].set(1e6)
+    a = jnp.ones((8,)).at[-1].set(0.0)
+    got = location.weighted_median(x, a)
+    assert jnp.all(got < 1e5)
+
+
+def test_m_estimate_quadratic_is_mean(rng):
+    x = jnp.asarray(rng.normal(size=(12, 25)).astype(np.float32))
+    res = location.m_estimate(x, loss=mestimators.QUADRATIC, num_iters=50)
+    np.testing.assert_allclose(res.estimate, jnp.mean(x, axis=0), atol=1e-4)
+
+
+def test_mm_estimate_resists_outliers(rng):
+    x = rng.normal(size=(20, 64)).astype(np.float32)
+    clean_mean = x[:14].mean(axis=0)
+    x[14:] += 1000.0   # 30% contamination
+    res = location.mm_estimate(jnp.asarray(x))
+    assert float(jnp.max(jnp.abs(res.estimate - clean_mean))) < 1.5
+
+
+def test_mm_estimate_weights_sum_to_one(rng):
+    x = jnp.asarray(rng.normal(size=(10, 16)).astype(np.float32))
+    res = location.mm_estimate(x)
+    np.testing.assert_allclose(jnp.sum(res.weights, axis=0), 1.0, atol=1e-5)
+
+
+def test_mm_weights_zero_on_outliers(rng):
+    x = rng.normal(size=(10, 8)).astype(np.float32)
+    x[-2:] += 500.0
+    res = location.mm_estimate(jnp.asarray(x))
+    # Eq. (23): outlier weights ~ 0
+    assert float(jnp.max(res.weights[-2:])) < 1e-3
+
+
+def test_mm_fixed_point_converged(rng):
+    """10 IRLS iterations suffice (DESIGN.md fixed-T note)."""
+    x = rng.normal(size=(32, 100)).astype(np.float32)
+    x[-9:] += 100.0
+    r10 = location.mm_estimate(jnp.asarray(x), num_iters=10).estimate
+    r50 = location.mm_estimate(jnp.asarray(x), num_iters=50).estimate
+    assert float(jnp.max(jnp.abs(r10 - r50))) < 1e-5
+
+
+def test_degenerate_all_equal():
+    x = jnp.ones((7, 5)) * 3.25
+    res = location.mm_estimate(x)
+    np.testing.assert_allclose(res.estimate, 3.25, atol=1e-6)

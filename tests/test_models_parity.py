@@ -1,0 +1,150 @@
+"""Decode-vs-forward parity: the KV-cache / recurrent-state decode path
+must reproduce full-sequence forward logits token by token."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import model as M
+
+
+def _parity(cfg, extra=None, T=12, tol=3e-4):
+    params = M.init_model(jax.random.key(0), cfg)
+    toks = jax.random.randint(jax.random.key(1), (2, T), 0, cfg.vocab_size,
+                              dtype=jnp.int32)
+    batch = {"tokens": toks, **(extra or {})}
+    full, _ = M.forward(params, cfg, batch, remat=False)
+
+    cache = M.init_cache(cfg, 2, T + 4)
+    if extra and "frames" in extra:
+        enc = M._encdec_encode(params, cfg, extra["frames"],
+                               lambda p: p, False)
+        ks, vs = [], []
+        for i in range(cfg.num_layers):
+            blk = jax.tree.map(lambda x: x[i], params["blocks"])
+            k, v = L.project_enc_kv(blk["xattn"], enc,
+                                    M.attn_dims(cfg, causal=False))
+            ks.append(k)
+            vs.append(v)
+        cache["cross"] = {"k": jnp.stack(ks), "v": jnp.stack(vs)}
+
+    outs = []
+    for t in range(T):
+        lg, cache = M.decode_step(params, cfg, toks[:, t:t + 1], cache)
+        outs.append(lg[:, 0])
+    dec = jnp.stack(outs, axis=1)
+    err = float(jnp.max(jnp.abs(dec - full)))
+    assert err < tol, (cfg.name, err)
+
+
+def test_dense_gqa_parity():
+    _parity(ModelConfig(name="d", arch_type="dense", num_layers=2, d_model=64,
+                        num_heads=4, num_kv_heads=2, d_ff=128, vocab_size=128,
+                        qk_norm=True, qkv_bias=True))
+
+
+def test_sliding_window_ring_cache_parity():
+    _parity(ModelConfig(name="sw", arch_type="dense", num_layers=2,
+                        d_model=64, num_heads=4, num_kv_heads=2, d_ff=128,
+                        vocab_size=128, sliding_window=4), T=14)
+
+
+def test_rwkv6_parity():
+    _parity(ModelConfig(name="r", arch_type="ssm", num_layers=2, d_model=64,
+                        num_heads=0, num_kv_heads=0, d_ff=128, vocab_size=128,
+                        ssm_head_dim=16, chunk_size=4))
+
+
+def test_rwkv6_chunk_size_invariance():
+    cfg1 = ModelConfig(name="r1", arch_type="ssm", num_layers=2, d_model=64,
+                       num_heads=0, num_kv_heads=0, d_ff=128, vocab_size=128,
+                       ssm_head_dim=16, chunk_size=4)
+    cfg2 = ModelConfig(name="r2", arch_type="ssm", num_layers=2, d_model=64,
+                       num_heads=0, num_kv_heads=0, d_ff=128, vocab_size=128,
+                       ssm_head_dim=16, chunk_size=16)
+    p = M.init_model(jax.random.key(0), cfg1)
+    toks = jax.random.randint(jax.random.key(1), (2, 16), 0, 128,
+                              dtype=jnp.int32)
+    l1, _ = M.forward(p, cfg1, {"tokens": toks}, remat=False)
+    l2, _ = M.forward(p, cfg2, {"tokens": toks}, remat=False)
+    np.testing.assert_allclose(l1, l2, atol=2e-4)
+
+
+def test_mamba_hybrid_parity():
+    _parity(ModelConfig(name="h", arch_type="hybrid", num_layers=4,
+                        d_model=64, num_heads=4, num_kv_heads=4, d_ff=128,
+                        vocab_size=128, ssm_state=16, ssm_head_dim=16,
+                        attn_every=2, chunk_size=4))
+
+
+def test_mamba_chunk_size_invariance():
+    cfg1 = ModelConfig(name="h1", arch_type="hybrid", num_layers=2,
+                       d_model=64, num_heads=4, num_kv_heads=4, d_ff=128,
+                       vocab_size=128, ssm_state=16, ssm_head_dim=16,
+                       attn_every=2, chunk_size=4)
+    cfg2 = ModelConfig(name="h2", arch_type="hybrid", num_layers=2,
+                       d_model=64, num_heads=4, num_kv_heads=4, d_ff=128,
+                       vocab_size=128, ssm_state=16, ssm_head_dim=16,
+                       attn_every=2, chunk_size=16)
+    p = M.init_model(jax.random.key(0), cfg1)
+    toks = jax.random.randint(jax.random.key(1), (2, 16), 0, 128,
+                              dtype=jnp.int32)
+    l1, _ = M.forward(p, cfg1, {"tokens": toks}, remat=False)
+    l2, _ = M.forward(p, cfg2, {"tokens": toks}, remat=False)
+    np.testing.assert_allclose(l1, l2, atol=2e-4)
+
+
+def test_encdec_parity():
+    cfg = ModelConfig(name="a", arch_type="audio", num_layers=2, d_model=64,
+                      num_heads=4, num_kv_heads=2, d_ff=128, vocab_size=128,
+                      encoder_layers=2, num_prefix_tokens=8, mlp_gated=False)
+    frames = jax.random.normal(jax.random.key(2), (2, 8, 64))
+    _parity(cfg, {"frames": frames})
+
+
+def test_q_chunked_attention_matches_full():
+    cfg_c = ModelConfig(name="c", arch_type="dense", num_layers=2, d_model=64,
+                        num_heads=4, num_kv_heads=2, d_ff=128, vocab_size=128,
+                        q_chunk=4)
+    cfg_f = ModelConfig(name="f", arch_type="dense", num_layers=2, d_model=64,
+                        num_heads=4, num_kv_heads=2, d_ff=128, vocab_size=128,
+                        q_chunk=4096)
+    p = M.init_model(jax.random.key(0), cfg_c)
+    toks = jax.random.randint(jax.random.key(1), (2, 16), 0, 128,
+                              dtype=jnp.int32)
+    l1, _ = M.forward(p, cfg_c, {"tokens": toks}, remat=False)
+    l2, _ = M.forward(p, cfg_f, {"tokens": toks}, remat=False)
+    np.testing.assert_allclose(l1, l2, atol=1e-5)
+
+
+def test_remat_does_not_change_values():
+    cfg = ModelConfig(name="rm", arch_type="dense", num_layers=2, d_model=64,
+                      num_heads=4, num_kv_heads=2, d_ff=128, vocab_size=128)
+    p = M.init_model(jax.random.key(0), cfg)
+    batch = {"tokens": jax.random.randint(jax.random.key(1), (2, 17), 0, 128,
+                                          dtype=jnp.int32)}
+    l1 = M.loss_fn(p, cfg, batch, remat=True)
+    l2 = M.loss_fn(p, cfg, batch, remat=False)
+    np.testing.assert_allclose(l1, l2, atol=1e-5)
+    g1 = jax.grad(lambda q: M.loss_fn(q, cfg, batch, remat=True))(p)
+    g2 = jax.grad(lambda q: M.loss_fn(q, cfg, batch, remat=False))(p)
+    for a, b in zip(jax.tree.leaves(g1), jax.tree.leaves(g2)):
+        np.testing.assert_allclose(a, b, atol=1e-4)
+
+
+def test_vlm_prefix_region_excluded_from_logits():
+    cfg = ModelConfig(name="v", arch_type="vlm", num_layers=2, d_model=64,
+                      num_heads=4, num_kv_heads=2, d_ff=128, vocab_size=128,
+                      num_prefix_tokens=8)
+    p = M.init_model(jax.random.key(0), cfg)
+    toks = jax.random.randint(jax.random.key(1), (2, 10), 0, 128,
+                              dtype=jnp.int32)
+    pre = jax.random.normal(jax.random.key(2), (2, 8, 64))
+    logits, _ = M.forward(p, cfg, {"tokens": toks, "prefix": pre},
+                          remat=False)
+    # vocab padded to a 256 multiple (Megatron-style; pads masked to -inf)
+    assert logits.shape == (2, 10, cfg.padded_vocab)
+    assert bool((logits[..., cfg.vocab_size:] < -1e30).all())
