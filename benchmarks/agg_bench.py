@@ -1,6 +1,9 @@
 """Aggregator micro-benchmark (the paper has no timing table; this is
 the systems-side cost table for EXPERIMENTS.md): wall time per call for
-each aggregator over (K, M), plus the Pallas kernel (interpret on CPU).
+each aggregator over (K, M), the Pallas kernel (interpret on CPU), and
+the engine's weighted-pytree path -- including a launch-count audit
+proving the whole gradient pytree is aggregated by ONE pallas_call,
+not one per leaf.
 """
 
 from __future__ import annotations
@@ -16,6 +19,31 @@ from repro.kernels import ops
 SHAPES = ((16, 1 << 16), (32, 1 << 18))
 AGGS = ("mean", "median", "trimmed_mean", "geometric_median", "krum",
         "m_huber", "mm_tukey")
+
+# a small transformer-block-shaped gradient pytree, stacked over K agents
+def _grad_tree(k: int):
+    key = jax.random.key(0)
+    mk = lambda i, *s: jax.random.normal(jax.random.fold_in(key, i), (k,) + s)
+    return {
+        "wq": mk(0, 256, 256), "wk": mk(1, 256, 64), "wv": mk(2, 256, 64),
+        "wo": mk(3, 256, 256), "w_up": mk(4, 256, 1024),
+        "w_down": mk(5, 1024, 256), "ln": mk(6, 256), "bias": mk(7, 256),
+    }
+
+
+def count_pallas_calls(fn, *args) -> int:
+    """Number of pallas_call equations in fn's jaxpr (recursively)."""
+    def walk(jaxpr) -> int:
+        n = 0
+        for eqn in jaxpr.eqns:
+            if eqn.primitive.name == "pallas_call":
+                n += 1
+            for v in eqn.params.values():
+                if hasattr(v, "jaxpr"):
+                    inner = v.jaxpr if hasattr(v.jaxpr, "eqns") else v
+                    n += walk(inner)
+        return n
+    return walk(jax.make_jaxpr(fn)(*args).jaxpr)
 
 
 def _time(fn, *args, reps=5):
@@ -42,6 +70,26 @@ def main() -> list[tuple]:
         f = jax.jit(lambda v: ops.mm_aggregate(v, interpret=True))
         us = _time(f, x)
         rows.append((f"agg/mm_pallas_interp/K{k}_M{m}", us, m / us))
+        # weighted single-array kernel path (Eq. 13's a_k inside the kernel)
+        a = jnp.linspace(0.5, 1.5, k)
+        fw = jax.jit(lambda v, w: ops.mm_aggregate(v, w, interpret=True))
+        us = _time(fw, x, a)
+        rows.append((f"agg/mm_pallas_weighted/K{k}_M{m}", us, m / us))
+
+    # weighted-pytree engine path: the whole gradient tree in ONE launch
+    for k in (8, 32):
+        tree = _grad_tree(k)
+        a = jnp.linspace(0.5, 1.5, k)
+        n_leaves = len(jax.tree.leaves(tree))
+        m_total = sum(int(l.size) // k for l in jax.tree.leaves(tree))
+        eng = ops.AggregationEngine(interpret=True)
+        launches = count_pallas_calls(
+            lambda t, w: eng.aggregate_tree(t, w), tree, a)
+        assert launches == 1, f"expected ONE kernel launch, got {launches}"
+        ft = jax.jit(lambda t, w: eng.aggregate_tree(t, w))
+        us = _time(ft, tree, a)
+        rows.append((f"agg/engine_tree_weighted/K{k}_leaves{n_leaves}"
+                     f"_M{m_total}_launches{launches}", us, m_total / us))
     return rows
 
 

@@ -1,0 +1,9 @@
+#!/usr/bin/env bash
+# Tier-1 verification: the whole suite, fail-fast, quiet.
+# (pyproject's pytest pythonpath handles src/ resolution; the explicit
+# PYTHONPATH export keeps the command working for tools that bypass
+# pytest's ini, e.g. the subprocess-based multi-device tests.)
+set -euo pipefail
+cd "$(dirname "$0")"
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+exec python -m pytest -x -q "$@"

@@ -33,8 +33,9 @@ Aggregator = Callable[..., jnp.ndarray]
 def _normalize_weights(a: Optional[jnp.ndarray], k: int, dtype) -> jnp.ndarray:
     if a is None:
         return jnp.full((k,), 1.0 / k, dtype=dtype)
-    a = a.astype(dtype)
-    return a / jnp.sum(a)
+    # guarded: all-zero / negative-sum / non-finite weights would produce
+    # NaN or garbage out of a bare a / sum(a); fall back to uniform.
+    return location.normalize_weights(a, dtype=dtype)
 
 
 def mean(x: jnp.ndarray, a: Optional[jnp.ndarray] = None) -> jnp.ndarray:
@@ -50,10 +51,16 @@ def median(x: jnp.ndarray, a: Optional[jnp.ndarray] = None) -> jnp.ndarray:
 
 def trimmed_mean(x: jnp.ndarray, a: Optional[jnp.ndarray] = None,
                  *, beta: float = 0.25) -> jnp.ndarray:
-    """Remove the floor(beta*K) smallest and largest values per coordinate."""
+    """Remove the floor(beta*K) smallest and largest values per coordinate.
+
+    The trim count is clamped so at least one row survives (e.g.
+    beta=0.5, K=4 would otherwise keep zero rows and return NaN).
+    """
     del a  # trimming is rank-based; combination weights are not meaningful
+    if not 0.0 <= beta <= 0.5:
+        raise ValueError(f"trimmed_mean needs beta in [0, 0.5], got {beta}")
     k = x.shape[0]
-    t = int(beta * k)
+    t = min(int(beta * k), (k - 1) // 2)
     xs = jnp.sort(x, axis=0)
     kept = xs[t:k - t] if t > 0 else xs
     return jnp.mean(kept, axis=0)
@@ -117,14 +124,14 @@ def mm_tukey(x: jnp.ndarray, a: Optional[jnp.ndarray] = None,
 
 
 def mm_pallas(x: jnp.ndarray, a: Optional[jnp.ndarray] = None,
-              *, num_iters: int = 10) -> jnp.ndarray:
+              *, num_iters: int = 10, c: float = mestimators.TUKEY_C95
+              ) -> jnp.ndarray:
     """The REF aggregator computed by the fused Pallas TPU kernel
-    (interpret mode on CPU).  Uniform weights only -- weighted calls
-    fall back to the jnp path."""
-    if a is not None:
-        return mm_tukey(x, a, num_iters=num_iters)
+    (interpret mode on CPU).  Weighted calls run *inside* the kernel
+    (weighted-median init + a_k-weighted IRLS); there is no jnp
+    fallback branch."""
     from repro.kernels import ops  # deferred: keep core import-light
-    return ops.mm_aggregate(x, num_iters=num_iters)
+    return ops.mm_aggregate(x, a, num_iters=num_iters, c=c)
 
 
 _REGISTRY: dict[str, Aggregator] = {

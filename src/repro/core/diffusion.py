@@ -47,12 +47,6 @@ class DiffusionConfig:
 
 
 def check_compatible(config: DiffusionConfig, combination: np.ndarray) -> None:
-    if config.aggregator == "mm_pallas":
-        # the fused-kernel path assumes one shared uniform neighborhood
-        if not np.allclose(combination, combination[0, 0]):
-            raise ValueError("mm_pallas requires uniform fully-connected "
-                             "combination weights (use mm_tukey otherwise)")
-        return
     if config.aggregator in _WEIGHT_AWARE:
         return
     if not (combination > 0).all():
@@ -83,11 +77,11 @@ def diffusion_step(
     agg = config.aggregator_fn()
 
     if config.aggregator == "mm_pallas":
-        # kernel path: uniform fully-connected weights only (checked in
-        # check_compatible) -> every column is identical; one fused
-        # kernel launch, result broadcast to all agents.
-        est = agg(phi_sent, None)
-        w_next = jnp.broadcast_to(est[None], w.shape)
+        # fused-kernel path: ALL K neighborhood columns (the a_{.k} of
+        # Eq. 15, arbitrary weights) in ONE batched kernel launch.
+        from repro.kernels import ops  # deferred: keep core import-light
+        w_next = ops.mm_aggregate_batched(
+            phi_sent, combination, **dict(config.agg_kwargs))  # (K, M)
     else:
         def combine_one(a_col):
             return agg(phi_sent, a_col)

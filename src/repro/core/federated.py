@@ -37,6 +37,9 @@ class FederatedConfig:
     aggregator: str = "mm_tukey"
     agg_kwargs: tuple = ()
     byzantine: attacks.ByzantineConfig = attacks.ByzantineConfig()
+    # optional per-client combination weights (K,), e.g. proportional to
+    # local dataset sizes (Eq. 4's p_k); None -> uniform server averaging
+    client_weights: Optional[tuple] = None
 
 
 def local_update(
@@ -82,11 +85,16 @@ def federated_round(
         )
         phis = fn(phis, mask, attack_key, 0)
 
-    # 4. robust server aggregation (Eq. 4 generalized)
+    # 4. robust server aggregation (Eq. 4 generalized).  With client
+    #    weights the sampled cohort's weights ride into the aggregator
+    #    (kernel-side for mm_pallas); the aggregator normalizes.
     agg = aggregators.get_aggregator(
         config.aggregator, **dict(config.agg_kwargs)
     )
-    return agg(phis, None)
+    a = None
+    if config.client_weights is not None:
+        a = jnp.asarray(config.client_weights, dtype=phis.dtype)[chosen]
+    return agg(phis, a)
 
 
 def run_federated(

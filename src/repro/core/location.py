@@ -53,12 +53,32 @@ def mad(x: jnp.ndarray, center: Optional[jnp.ndarray] = None, axis: int = 0,
     return s
 
 
+def normalize_weights(a: jnp.ndarray, dtype=None) -> jnp.ndarray:
+    """Validate + column-normalize combination weights.
+
+    ``a`` is (K,) or (K, N) with the agent axis first.  A column is
+    *invalid* if it contains a non-finite or negative entry or sums to
+    (numerically) zero -- dividing by such a sum yields NaN/garbage
+    downstream -- and falls back to uniform 1/K.  jit-safe (no python
+    branching on values).
+    """
+    if dtype is not None:
+        a = a.astype(dtype)
+    k = a.shape[0]
+    ok = jnp.all(jnp.isfinite(a) & (a >= 0), axis=0, keepdims=True)
+    s = jnp.sum(a, axis=0, keepdims=True)
+    ok = ok & (s > _SCALE_FLOOR)
+    return jnp.where(ok, a / jnp.where(ok, s, 1.0),
+                     jnp.asarray(1.0 / k, dtype=a.dtype))
+
+
 def weighted_median(x: jnp.ndarray, a: jnp.ndarray, axis: int = 0) -> jnp.ndarray:
     """Weighted median along ``axis``: smallest x with cumweight >= 1/2.
 
-    ``a`` has shape (K,) and is normalized internally.
+    ``a`` has shape (K,) and is normalized internally (all-zero or
+    otherwise invalid weights fall back to uniform).
     """
-    a = a / jnp.sum(a)
+    a = normalize_weights(a, dtype=x.dtype)
     order = jnp.argsort(x, axis=axis)
     xs = jnp.take_along_axis(x, order, axis=axis)
     # broadcast weights to x's shape, permuted consistently
@@ -101,8 +121,7 @@ def m_estimate(
     if a is None:
         a = jnp.full((k,), 1.0 / k, dtype=x.dtype)
     else:
-        a = a.astype(x.dtype)
-        a = a / jnp.sum(a)
+        a = normalize_weights(a, dtype=x.dtype)
     a_col = a.reshape((k,) + (1,) * (x.ndim - 1))
 
     mu0 = median(x, axis=0) if init is None else init

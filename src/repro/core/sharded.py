@@ -46,8 +46,22 @@ def _axis_size(axis_name: AxisName) -> int:
     return jax.lax.psum(1, axis_name)
 
 
+_ENGINE_BACKENDS = {"mm_tukey": "jnp", "ref": "jnp", "mm_pallas": "pallas"}
+
+
 def _get_agg(aggregator, **kwargs) -> Callable:
     if isinstance(aggregator, str):
+        backend = _ENGINE_BACKENDS.get(aggregator)
+        if backend is not None:
+            # MM aggregation goes through the one engine entry point
+            # (kernels.ops); the jnp backend is the identical estimator
+            # for shard_map regions that cannot host a pallas_call.
+            from repro.kernels import ops  # deferred: avoid import cycle
+
+            def agg(x, a, _backend=backend, _kw=kwargs):
+                return ops.mm_aggregate(x, a, backend=_backend, **_kw)
+
+            return agg
         return aggregators.get_aggregator(aggregator, **kwargs)
     return functools.partial(aggregator, **kwargs) if kwargs else aggregator
 

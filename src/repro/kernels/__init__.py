@@ -1,8 +1,17 @@
 """Pallas TPU kernels for the perf-critical aggregation hot-spot.
 
-mm_aggregate.py -- fused median/MAD/Tukey-IRLS over (K, M) tiles
-ops.py          -- jit'd wrappers (single array + whole-pytree launch)
+mm_aggregate.py -- fused (weighted) median/MAD/Tukey-IRLS over (K, M)
+                   tiles, batched over neighborhood weight columns
+ops.py          -- AggregationEngine: the repo-wide aggregation entry
+                   point (array / batched / whole-pytree single launch)
 ref.py          -- pure-jnp oracle (tests assert kernel == ref)
 """
 
 from repro.kernels import mm_aggregate, ops, ref  # noqa: F401
+from repro.kernels.ops import (  # noqa: F401
+    AggregationEngine,
+    get_engine,
+    mm_aggregate as aggregate,
+    mm_aggregate_batched as aggregate_batched,
+    mm_aggregate_tree as aggregate_tree,
+)

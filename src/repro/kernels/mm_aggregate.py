@@ -1,11 +1,13 @@
-"""Pallas TPU kernel for fused elementwise MM-aggregation.
+"""Pallas TPU kernel for fused elementwise (weighted) MM-aggregation.
 
-The hot loop of the paper's aggregator is, per model coordinate m:
+The hot loop of the paper's aggregator is, per model coordinate m and
+combination weights a (Eq. 10/13; uniform a recovers Eq. 8):
 
-    med   = median_k  phi[k, m]                       (robust init)
+    med   = wmedian_k(phi[k, m]; a)                   (robust init)
     s     = 1.4826 * median_k |phi[k, m] - med|       (MAD scale)
     mu_0  = med
-    T x:  w_k = tukey_w((phi[k,m] - mu_t) / (c*s));  mu_{t+1} = sum w_k phi / sum w_k
+    T x:  b_k = tukey_w((phi[k,m] - mu_t) / (c*s))
+          mu_{t+1} = sum a_k b_k phi / sum a_k b_k
 
 A naive jnp composition round-trips HBM ~3+T times (two sorts, T
 weighted reductions).  The kernel fuses *everything* into one VMEM
@@ -18,28 +20,37 @@ TPU adaptation notes (vs a GPU port):
   * No `sort` primitive is needed: K is *static*, so the median is an
     odd-even transposition network (K_pad passes of min/max on
     sublane-reshaped registers) -- pure VPU ops, no data-dependent
-    control flow.
-  * K is padded to the next even size with +inf sentinel rows; the
-    median/MAD read fixed ranks (K-1)//2 and K//2 of the sorted tile,
-    so sentinels never enter.  IRLS masks sentinel rows explicitly
-    (0 * inf = nan otherwise).
+    control flow.  The weighted variant carries the weight rows through
+    the same network and selects the cumulative-weight-0.5 crossing.
+  * K is padded to the next block multiple with +inf sentinel rows
+    (weight 0); the median/MAD read fixed ranks (K-1)//2 and K//2 of
+    the sorted tile, so sentinels never enter.  IRLS masks sentinel
+    rows explicitly (0 * inf = nan otherwise).
   * m is tiled in multiples of 128 lanes (bm defaults to 512); the
-    launcher pads M and strips the pad.
+    launcher pads M with ZERO columns (sentinel +inf columns would make
+    the in-kernel MAD compute inf - inf = nan) and strips the pad.
   * Compute is float32 internally regardless of input dtype (bf16
-    gradients upcast per tile -- matches the reference).
+    gradients upcast per tile, bf16 written back -- matches the
+    reference).
 
-Grid: (M_pad // bm,).  in: (K_pad, bm) VMEM block; out: (1, bm).
+Grid: (N, M_pad // bm, K_pad // bk) -- N weight columns (batched
+neighborhoods; 1 for a single aggregate), M tiles, and a streamed K
+axis: each (bk, bm) input block is DMA'd into a persistent
+(K_pad, bm) VMEM scratch accumulator and the estimate is computed on
+the last K step, so K larger than a single pipeline block still works.
 """
 
 from __future__ import annotations
 
 import functools
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
-from repro.core import mestimators
+from repro.core import location, mestimators
 
 DEFAULT_BLOCK_M = 512
 _SCALE_FLOOR = 1e-12
@@ -69,6 +80,42 @@ def _oddeven_sort_rows(x: jnp.ndarray) -> jnp.ndarray:
     return x
 
 
+def _oddeven_sort_rows_paired(
+    x: jnp.ndarray, w: jnp.ndarray
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Joint odd-even sort: order by ``x``, carrying ``w`` along.
+
+    The compare-exchange swaps both arrays on the x-comparison, so the
+    output weight rows follow the per-column value permutation (ties
+    keep their original order, matching a stable argsort *for the
+    selected value* -- tied values are interchangeable).
+    """
+    p = x.shape[0]
+    assert p % 2 == 0, "row count must be padded to even"
+
+    def cmpswap(x0, x1, w0, w1):
+        swap = x0 > x1
+        return (jnp.where(swap, x1, x0), jnp.where(swap, x0, x1),
+                jnp.where(swap, w1, w0), jnp.where(swap, w0, w1))
+
+    for step in range(p):
+        if step % 2 == 0:
+            xp = x.reshape(p // 2, 2, x.shape[1])
+            wp = w.reshape(p // 2, 2, w.shape[1])
+            lo, hi, wlo, whi = cmpswap(xp[:, 0], xp[:, 1], wp[:, 0], wp[:, 1])
+            x = jnp.stack([lo, hi], axis=1).reshape(p, x.shape[1])
+            w = jnp.stack([wlo, whi], axis=1).reshape(p, w.shape[1])
+        elif p > 2:
+            xm = x[1:p - 1].reshape((p - 2) // 2, 2, x.shape[1])
+            wm = w[1:p - 1].reshape((p - 2) // 2, 2, w.shape[1])
+            lo, hi, wlo, whi = cmpswap(xm[:, 0], xm[:, 1], wm[:, 0], wm[:, 1])
+            xmid = jnp.stack([lo, hi], axis=1).reshape(p - 2, x.shape[1])
+            wmid = jnp.stack([wlo, whi], axis=1).reshape(p - 2, w.shape[1])
+            x = jnp.concatenate([x[:1], xmid, x[p - 1:]], axis=0)
+            w = jnp.concatenate([w[:1], wmid, w[p - 1:]], axis=0)
+    return x, w
+
+
 def _median_rows(x_sorted: jnp.ndarray, k: int) -> jnp.ndarray:
     """Median of the first k (valid) rows of an ascending-sorted tile whose
     pad rows are +inf (and therefore sorted to the end)."""
@@ -77,72 +124,194 @@ def _median_rows(x_sorted: jnp.ndarray, k: int) -> jnp.ndarray:
     return 0.5 * (lo + hi)
 
 
-def _mm_kernel(x_ref, o_ref, *, k: int, num_iters: int, c: float):
-    xp = x_ref[...].astype(jnp.float32)              # (K_pad, bm), pads=+inf
-    k_pad = xp.shape[0]
-    valid = (jax.lax.broadcasted_iota(jnp.int32, xp.shape, 0) < k)
-    x = jnp.where(valid, xp, 0.0)                    # masked values for IRLS
-
-    # --- robust init: median + MAD (sentinels sort to the end) ---
-    xs = _oddeven_sort_rows(xp)
-    med = _median_rows(xs, k)                        # (bm,)
-    dev = jnp.where(valid, jnp.abs(xp - med[None]), jnp.inf)
-    ds = _oddeven_sort_rows(dev)
-    scale = jnp.maximum(_MAD_CONSISTENCY * _median_rows(ds, k), _SCALE_FLOOR)
-
-    # --- efficient refinement: fixed-T Tukey IRLS ---
-    c2 = jnp.float32(c * c)
-
-    def body(t, mu):
-        y = (x - mu[None]) / scale[None]
-        u = jnp.clip(1.0 - (y * y) / c2, 0.0, 1.0)
-        w = jnp.where(valid, u * u, 0.0)
-        num = jnp.sum(w * x, axis=0)
-        den = jnp.sum(w, axis=0)
-        safe = den > _SCALE_FLOOR
-        return jnp.where(safe, num / jnp.where(safe, den, 1.0), mu)
-
-    mu = jax.lax.fori_loop(0, num_iters, body, med)
-    o_ref[...] = mu[None].astype(o_ref.dtype)
+def _weighted_median_rows(xs: jnp.ndarray, ws: jnp.ndarray) -> jnp.ndarray:
+    """Weighted median of an ascending-sorted tile: the first value whose
+    cumulative (normalized) weight reaches 1/2.  Sentinel rows carry
+    weight 0 and sort to the end, so they are never selected."""
+    cw = jnp.cumsum(ws, axis=0)
+    prev = jnp.concatenate([jnp.zeros_like(cw[:1]), cw[:-1]], axis=0)
+    sel = (cw >= 0.5) & (prev < 0.5)
+    return jnp.sum(jnp.where(sel, xs, 0.0), axis=0)
 
 
-def mm_aggregate_2d(
-    x: jnp.ndarray,
-    *,
-    num_iters: int = 10,
-    c: float = mestimators.TUKEY_C95,
-    block_m: int = DEFAULT_BLOCK_M,
-    interpret: bool | None = None,
-) -> jnp.ndarray:
-    """MM-aggregate a (K, M) array along axis 0 -> (M,) via Pallas.
+def _mm_kernel(x_ref, a_ref, o_ref, xs_ref, *, k: int, block_k: int,
+               num_iters: int, c: float, weighted: bool):
+    """Grid (N, M/bm, K_pad/bk): stream K blocks into the VMEM scratch
+    accumulator, compute the full fused estimate on the last K step."""
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+    xs_ref[pl.ds(ki * block_k, block_k), :] = x_ref[...].astype(jnp.float32)
 
-    Pads K to even with +inf sentinel rows and M to a block multiple.
+    @pl.when(ki == nk - 1)
+    def _compute():
+        xp = xs_ref[...]                             # (K_pad, bm), pads=+inf
+        valid = (jax.lax.broadcasted_iota(jnp.int32, xp.shape, 0) < k)
+        x = jnp.where(valid, xp, 0.0)                # masked values for IRLS
+        # normalized combination weights; sentinel rows are 0
+        a = jnp.where(valid, jnp.broadcast_to(
+            a_ref[...].astype(jnp.float32), xp.shape), 0.0)
+
+        # --- robust init: (weighted) median + MAD ---
+        if weighted:
+            xs, ws = _oddeven_sort_rows_paired(xp, a)
+            med = _weighted_median_rows(xs, ws)      # (bm,)
+        else:
+            xs = _oddeven_sort_rows(xp)
+            med = _median_rows(xs, k)                # (bm,)
+        dev = jnp.where(valid, jnp.abs(xp - med[None]), jnp.inf)
+        ds = _oddeven_sort_rows(dev)
+        scale = jnp.maximum(_MAD_CONSISTENCY * _median_rows(ds, k),
+                            _SCALE_FLOOR)
+
+        # --- efficient refinement: fixed-T weighted Tukey IRLS ---
+        c2 = jnp.float32(c * c)
+
+        def body(t, mu):
+            y = (x - mu[None]) / scale[None]
+            u = jnp.clip(1.0 - (y * y) / c2, 0.0, 1.0)
+            w = a * (u * u)                          # a_k * b_k, 0 on pads
+            num = jnp.sum(w * x, axis=0)
+            den = jnp.sum(w, axis=0)
+            safe = den > _SCALE_FLOOR
+            return jnp.where(safe, num / jnp.where(safe, den, 1.0), mu)
+
+        mu = jax.lax.fori_loop(0, num_iters, body, med)
+        o_ref[...] = mu[None].astype(o_ref.dtype)
+
+
+def _pad_inputs(
+    x: jnp.ndarray, a: jnp.ndarray, *, block_m: int, block_k: Optional[int]
+) -> Tuple[jnp.ndarray, jnp.ndarray, int]:
+    """Pad (K, M) values and (K, N) weights for the kernel grid.
+
+    K is padded to a multiple of the (even) K block with +inf sentinel
+    rows (weight 0).  M is padded to a block multiple with ZERO columns:
+    a non-finite M pad would flow through the in-kernel MAD as
+    inf - inf = nan (the pre-fix behavior); zero columns are inert
+    (median 0, scale floored, IRLS exact).
     """
-    if x.ndim != 2:
-        raise ValueError(f"mm_aggregate_2d wants (K, M), got {x.shape}")
-    if interpret is None:
-        interpret = jax.default_backend() == "cpu"
     k, m = x.shape
-    k_pad = k + (k % 2)
+    if block_k is None:
+        bk = k + (k % 2)
+    else:
+        if block_k % 2 != 0 or block_k <= 0:
+            raise ValueError(f"block_k must be positive and even, got {block_k}")
+        bk = block_k
+    k_pad = ((k + bk - 1) // bk) * bk
     m_pad = (-m) % block_m
 
     xp = x
     if k_pad != k:
-        inf_row = jnp.full((k_pad - k, m), jnp.inf, dtype=x.dtype)
-        xp = jnp.concatenate([xp, inf_row], axis=0)
+        xp = jnp.concatenate(
+            [xp, jnp.full((k_pad - k, m), jnp.inf, dtype=x.dtype)], axis=0)
     if m_pad:
         xp = jnp.concatenate(
-            [xp, jnp.full((k_pad, m_pad), jnp.inf, dtype=x.dtype)], axis=1
-        )
-    m_total = m + m_pad
+            [xp, jnp.zeros((k_pad, m_pad), dtype=x.dtype)], axis=1)
+    ap = a.astype(jnp.float32)
+    if k_pad != k:
+        ap = jnp.concatenate(
+            [ap, jnp.zeros((k_pad - k, ap.shape[1]), jnp.float32)], axis=0)
+    return xp, ap, bk
 
-    kernel = functools.partial(_mm_kernel, k=k, num_iters=num_iters, c=c)
+
+def _launch(
+    x: jnp.ndarray,
+    a: jnp.ndarray,                  # (K, N) normalized weight columns
+    *,
+    weighted: bool,
+    num_iters: int,
+    c: float,
+    block_m: int,
+    block_k: Optional[int],
+    interpret: Optional[bool],
+) -> jnp.ndarray:
+    """Run the fused kernel: (K, M) values x (K, N) weights -> (N, M).
+
+    Weight columns are normalized (and invalid columns replaced by
+    uniform) here -- the in-kernel weighted median selects the absolute
+    cumulative-weight-0.5 crossing, so unnormalized weights would be
+    silently wrong, not just scaled.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    k, m = x.shape
+    if weighted:
+        a = location.normalize_weights(a, dtype=jnp.float32)
+    n_out = a.shape[1]
+    xp, ap, bk = _pad_inputs(x, a, block_m=block_m, block_k=block_k)
+    k_pad, m_total = xp.shape
+
+    kernel = functools.partial(_mm_kernel, k=k, block_k=bk,
+                               num_iters=num_iters, c=c, weighted=weighted)
     out = pl.pallas_call(
         kernel,
-        grid=(m_total // block_m,),
-        in_specs=[pl.BlockSpec((k_pad, block_m), lambda i: (0, i))],
-        out_specs=pl.BlockSpec((1, block_m), lambda i: (0, i)),
-        out_shape=jax.ShapeDtypeStruct((1, m_total), x.dtype),
+        grid=(n_out, m_total // block_m, k_pad // bk),
+        in_specs=[
+            pl.BlockSpec((bk, block_m), lambda n, mi, ki: (ki, mi)),
+            pl.BlockSpec((k_pad, 1), lambda n, mi, ki: (0, n)),
+        ],
+        out_specs=pl.BlockSpec((1, block_m), lambda n, mi, ki: (n, mi)),
+        out_shape=jax.ShapeDtypeStruct((n_out, m_total), x.dtype),
+        scratch_shapes=[pltpu.VMEM((k_pad, block_m), jnp.float32)],
         interpret=interpret,
-    )(xp)
-    return out[0, :m]
+    )(xp, ap)
+    return out[:, :m]
+
+
+def _uniform_weights(k: int) -> jnp.ndarray:
+    return jnp.full((k, 1), 1.0 / k, dtype=jnp.float32)
+
+
+def mm_aggregate_2d(
+    x: jnp.ndarray,
+    a: Optional[jnp.ndarray] = None,
+    *,
+    num_iters: int = 10,
+    c: float = mestimators.TUKEY_C95,
+    block_m: int = DEFAULT_BLOCK_M,
+    block_k: Optional[int] = None,
+    interpret: Optional[bool] = None,
+) -> jnp.ndarray:
+    """MM-aggregate a (K, M) array along axis 0 -> (M,) via Pallas.
+
+    ``a`` is an optional (K,) vector of combination weights; it is
+    normalized internally (invalid weights fall back to uniform, as in
+    ``repro.core.location.normalize_weights``).
+    """
+    if x.ndim != 2:
+        raise ValueError(f"mm_aggregate_2d wants (K, M), got {x.shape}")
+    k = x.shape[0]
+    if a is None:
+        aw, weighted = _uniform_weights(k), False
+    else:
+        if a.shape != (k,):
+            raise ValueError(f"weights must be ({k},), got {a.shape}")
+        aw, weighted = a.reshape(k, 1), True
+    out = _launch(x, aw, weighted=weighted, num_iters=num_iters, c=c,
+                  block_m=block_m, block_k=block_k, interpret=interpret)
+    return out[0]
+
+
+def mm_aggregate_batched_2d(
+    x: jnp.ndarray,
+    a: jnp.ndarray,
+    *,
+    num_iters: int = 10,
+    c: float = mestimators.TUKEY_C95,
+    block_m: int = DEFAULT_BLOCK_M,
+    block_k: Optional[int] = None,
+    interpret: Optional[bool] = None,
+) -> jnp.ndarray:
+    """Batched weighted MM-aggregation: (K, M) values, (K, N) weight
+    columns -> (N, M) estimates, one kernel launch.
+
+    Column n of ``a`` is one neighborhood's combination weights (a_{.n}
+    of Eq. 15), normalized internally per column; the x tile is
+    re-streamed per output, which is cheap for the diffusion-sized
+    K, N <= 64 this serves.
+    """
+    if x.ndim != 2 or a.ndim != 2 or a.shape[0] != x.shape[0]:
+        raise ValueError(
+            f"want x (K, M) and a (K, N), got {x.shape} and {a.shape}")
+    return _launch(x, a, weighted=True, num_iters=num_iters, c=c,
+                   block_m=block_m, block_k=block_k, interpret=interpret)

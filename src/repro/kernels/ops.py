@@ -1,8 +1,23 @@
-"""Public jit'd wrappers around the Pallas MM-aggregation kernel.
+"""The aggregation engine: one entry point for every MM-aggregation.
 
-``mm_aggregate`` handles arbitrary trailing shapes; ``mm_aggregate_tree``
-flattens a whole gradient pytree into one (K, M_total) kernel launch so
-small leaves (biases, norms) don't each pay a dispatch.
+``AggregationEngine`` wraps the fused Pallas kernel (or the jnp oracle,
+for contexts that cannot host a pallas_call) behind a uniform API:
+
+  aggregate(x, a=None)          -- (K, ...) array -> (...)
+  aggregate_batched(x, A)       -- (K, M) x (K, N) weight columns -> (N, M)
+  aggregate_tree(tree, a=None)  -- whole gradient pytree, ONE kernel launch
+
+The tree path flattens all leaves into a single (K, M_total) buffer so
+small leaves (biases, norms) don't each pay a kernel dispatch; the
+layout (treedef, per-leaf offsets/shapes) is computed once per tree
+structure and cached on the engine, so repeated training-step calls
+reuse the compiled flatten->kernel->split program instead of rebuilding
+the concatenation plan.
+
+Module-level ``mm_aggregate`` / ``mm_aggregate_batched`` /
+``mm_aggregate_tree`` delegate to a shared default engine and are what
+the aggregator registry, diffusion, federated, sharded collectives and
+the train steps call.
 """
 
 from __future__ import annotations
@@ -13,56 +28,203 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core import mestimators
+from repro.core import location, mestimators
 from repro.kernels import mm_aggregate as _k
 
 
-@functools.partial(jax.jit, static_argnames=("num_iters", "c", "block_m", "interpret"))
+def _tukey(c: float):
+    return (mestimators.TUKEY if c == mestimators.TUKEY_C95
+            else mestimators.make_tukey(c))
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "num_iters", "c", "block_m", "block_k", "interpret", "backend"))
+def _agg_nd(x, a, *, num_iters, c, block_m, block_k, interpret, backend):
+    """(K, ...) -> (...), optional (K,) weights.
+
+    The jnp backend never flattens trailing dims (the estimate is
+    elementwise), so auto-axis sharding of multi-dim gradient leaves
+    survives under GSPMD; the pallas path is VMEM-tiled and reshapes to
+    (K, M) by construction.
+    """
+    if backend == "jnp":
+        af = None if a is None else a.astype(jnp.float32)
+        out = location.mm_estimate(
+            x.astype(jnp.float32), a=af, loss=_tukey(c),
+            num_iters=num_iters).estimate
+        return out.astype(x.dtype)
+    k = x.shape[0]
+    out = _k.mm_aggregate_2d(x.reshape(k, -1), a, num_iters=num_iters, c=c,
+                             block_m=block_m, block_k=block_k,
+                             interpret=interpret)
+    return out.reshape(x.shape[1:])
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "num_iters", "c", "block_m", "block_k", "interpret", "backend"))
+def _agg_batched_2d(flat, a, *, num_iters, c, block_m, block_k, interpret,
+                    backend):
+    """(K, M) x (K, N) -> (N, M)."""
+    if backend == "jnp":
+        xf = flat.astype(jnp.float32)
+        out = jax.vmap(
+            lambda col: location.mm_estimate(
+                xf, a=col.astype(jnp.float32), loss=_tukey(c),
+                num_iters=num_iters).estimate,
+            in_axes=1)(a)
+        return out.astype(flat.dtype)
+    return _k.mm_aggregate_batched_2d(flat, a, num_iters=num_iters, c=c,
+                                      block_m=block_m, block_k=block_k,
+                                      interpret=interpret)
+
+
+class _TreeLayout:
+    """Cached flatten plan for one pytree structure."""
+
+    __slots__ = ("treedef", "shapes", "dtypes", "sizes", "offsets", "k")
+
+    def __init__(self, treedef, leaves):
+        self.treedef = treedef
+        self.k = leaves[0].shape[0]
+        self.shapes = tuple(l.shape for l in leaves)
+        self.dtypes = tuple(l.dtype for l in leaves)
+        self.sizes = tuple(int(l.size) // self.k for l in leaves)
+        offs, off = [], 0
+        for n in self.sizes:
+            offs.append(off)
+            off += n
+        self.offsets = tuple(offs)
+
+    def key(self):
+        return (self.treedef, self.shapes, self.dtypes)
+
+
+class AggregationEngine:
+    """Weighted, batched MM-aggregation around the fused Pallas kernel.
+
+    ``backend="pallas"`` runs the fused kernel (interpret mode on CPU);
+    ``backend="jnp"`` runs the identical algorithm via core.location for
+    contexts that cannot host a pallas_call (it is the kernel's oracle,
+    so both backends agree to float tolerance).
+    """
+
+    def __init__(self, *, num_iters: int = 10,
+                 c: float = mestimators.TUKEY_C95,
+                 block_m: int = _k.DEFAULT_BLOCK_M,
+                 block_k: Optional[int] = None,
+                 interpret: Optional[bool] = None,
+                 backend: str = "pallas"):
+        if backend not in ("pallas", "jnp"):
+            raise ValueError(f"unknown backend {backend!r}")
+        self.num_iters = num_iters
+        self.c = c
+        self.block_m = block_m
+        self.block_k = block_k
+        self.interpret = interpret
+        self.backend = backend
+        self._layouts: dict = {}
+
+    def _opts(self):
+        return dict(num_iters=self.num_iters, c=self.c, block_m=self.block_m,
+                    block_k=self.block_k, interpret=self.interpret,
+                    backend=self.backend)
+
+    # -- arrays ------------------------------------------------------------
+
+    def aggregate(self, x: jnp.ndarray,
+                  a: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+        """MM location estimate along axis 0: (K, ...) -> (...)."""
+        return _agg_nd(x, a, **self._opts())
+
+    def aggregate_batched(self, x: jnp.ndarray, a: jnp.ndarray) -> jnp.ndarray:
+        """(K, ...) values x (K, N) weight columns -> (N, ...): every
+        neighborhood of a combination matrix in one kernel launch."""
+        k = x.shape[0]
+        out = _agg_batched_2d(x.reshape(k, -1), a, **self._opts())
+        return out.reshape((a.shape[1],) + x.shape[1:])
+
+    # -- pytrees -----------------------------------------------------------
+
+    def _layout_for(self, leaves, treedef) -> _TreeLayout:
+        layout = _TreeLayout(treedef, leaves)
+        return self._layouts.setdefault(layout.key(), layout)
+
+    def aggregate_tree(self, tree, a: Optional[jnp.ndarray] = None):
+        """Aggregate a pytree of stacked (K, ...) leaves in ONE launch.
+
+        All leaves are flattened into the cached (K, M_total) layout,
+        aggregated by a single kernel launch, and split back.
+        """
+        leaves, treedef = jax.tree.flatten(tree)
+        if not leaves:
+            return tree
+        layout = self._layout_for(leaves, treedef)
+        k = layout.k
+        flat = jnp.concatenate(
+            [l.astype(jnp.float32).reshape(k, -1) for l in leaves], axis=1)
+        agg = _agg_nd(flat, a, **self._opts())
+        outs = [
+            agg[off:off + n].reshape(shape[1:]).astype(dtype)
+            for off, n, shape, dtype in zip(
+                layout.offsets, layout.sizes, layout.shapes, layout.dtypes)
+        ]
+        return jax.tree.unflatten(layout.treedef, outs)
+
+
+@functools.lru_cache(maxsize=None)
+def get_engine(**kwargs) -> AggregationEngine:
+    """Shared engines, memoized by configuration."""
+    return AggregationEngine(**kwargs)
+
+
+def _engine(num_iters, c, block_m, block_k, interpret, backend):
+    return get_engine(num_iters=num_iters, c=c, block_m=block_m,
+                      block_k=block_k, interpret=interpret, backend=backend)
+
+
 def mm_aggregate(
     x: jnp.ndarray,
+    a: Optional[jnp.ndarray] = None,
     *,
     num_iters: int = 10,
     c: float = mestimators.TUKEY_C95,
     block_m: int = _k.DEFAULT_BLOCK_M,
+    block_k: Optional[int] = None,
     interpret: Optional[bool] = None,
+    backend: str = "pallas",
 ) -> jnp.ndarray:
     """MM location estimate along axis 0: (K, ...) -> (...)."""
-    k = x.shape[0]
-    flat = x.reshape(k, -1)
-    out = _k.mm_aggregate_2d(
-        flat, num_iters=num_iters, c=c, block_m=block_m, interpret=interpret
-    )
-    return out.reshape(x.shape[1:])
+    return _engine(num_iters, c, block_m, block_k, interpret,
+                   backend).aggregate(x, a)
+
+
+def mm_aggregate_batched(
+    x: jnp.ndarray,
+    a: jnp.ndarray,
+    *,
+    num_iters: int = 10,
+    c: float = mestimators.TUKEY_C95,
+    block_m: int = _k.DEFAULT_BLOCK_M,
+    block_k: Optional[int] = None,
+    interpret: Optional[bool] = None,
+    backend: str = "pallas",
+) -> jnp.ndarray:
+    """Batched weighted aggregation: (K, ...) x (K, N) -> (N, ...)."""
+    return _engine(num_iters, c, block_m, block_k, interpret,
+                   backend).aggregate_batched(x, a)
 
 
 def mm_aggregate_tree(
     tree,
+    a: Optional[jnp.ndarray] = None,
     *,
     num_iters: int = 10,
     c: float = mestimators.TUKEY_C95,
     block_m: int = _k.DEFAULT_BLOCK_M,
+    block_k: Optional[int] = None,
     interpret: Optional[bool] = None,
+    backend: str = "pallas",
 ):
-    """Aggregate a pytree of stacked (K, ...) leaves in ONE kernel launch.
-
-    All leaves are flattened, concatenated along m, aggregated, and
-    split back -- one VMEM pipeline over the whole model instead of one
-    pallas_call per leaf.
-    """
-    leaves, treedef = jax.tree.flatten(tree)
-    if not leaves:
-        return tree
-    k = leaves[0].shape[0]
-    sizes = [int(l.size) // k for l in leaves]
-    flat = jnp.concatenate(
-        [l.astype(jnp.float32).reshape(k, -1) for l in leaves], axis=1
-    )
-    agg = mm_aggregate(
-        flat, num_iters=num_iters, c=c, block_m=block_m, interpret=interpret
-    )
-    outs = []
-    off = 0
-    for leaf, n in zip(leaves, sizes):
-        outs.append(agg[off:off + n].reshape(leaf.shape[1:]).astype(leaf.dtype))
-        off += n
-    return jax.tree.unflatten(treedef, outs)
+    """Aggregate a pytree of stacked (K, ...) leaves in ONE kernel launch."""
+    return _engine(num_iters, c, block_m, block_k, interpret,
+                   backend).aggregate_tree(tree, a)

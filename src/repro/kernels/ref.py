@@ -3,25 +3,40 @@
 This is the exact algorithm the Pallas kernel implements, written with
 plain jax.numpy, and is the reference every kernel test asserts
 against.  It intentionally reuses core.location (single source of truth
-for the statistics) with uniform weights, Tukey loss, and a fixed IRLS
-iteration count.
+for the statistics) with optional combination weights, Tukey loss, and
+a fixed IRLS iteration count.
 """
 
 from __future__ import annotations
 
+from typing import Optional
+
+import jax
 import jax.numpy as jnp
 
 from repro.core import location, mestimators
 
 
-def mm_aggregate_ref(x: jnp.ndarray, *, num_iters: int = 10,
+def mm_aggregate_ref(x: jnp.ndarray, a: Optional[jnp.ndarray] = None,
+                     *, num_iters: int = 10,
                      c: float = mestimators.TUKEY_C95) -> jnp.ndarray:
     """MM location estimate along axis 0 of ``x`` (K, ...) -> (...).
 
-    median/MAD init + ``num_iters`` Tukey-IRLS refinement steps, uniform
-    agent weights, computed in float32 regardless of input dtype.
+    (Weighted-)median/MAD init + ``num_iters`` Tukey-IRLS refinement
+    steps, computed in float32 regardless of input dtype.  ``a`` is an
+    optional (K,) vector of combination weights (uniform if omitted).
     """
     loss = mestimators.TUKEY if c == mestimators.TUKEY_C95 else mestimators.make_tukey(c)
     xf = x.astype(jnp.float32)
-    out = location.mm_estimate(xf, loss=loss, num_iters=num_iters).estimate
+    af = None if a is None else a.astype(jnp.float32)
+    out = location.mm_estimate(xf, a=af, loss=loss, num_iters=num_iters).estimate
     return out.astype(x.dtype)
+
+
+def mm_aggregate_batched_ref(x: jnp.ndarray, a: jnp.ndarray,
+                             *, num_iters: int = 10,
+                             c: float = mestimators.TUKEY_C95) -> jnp.ndarray:
+    """Batched oracle: (K, M) values x (K, N) weight columns -> (N, M)."""
+    return jax.vmap(
+        lambda col: mm_aggregate_ref(x, col, num_iters=num_iters, c=c),
+        in_axes=1)(a)

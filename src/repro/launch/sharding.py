@@ -18,6 +18,8 @@ from typing import Optional, Sequence, Tuple, Union
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro import compat
+
 # logical name -> tuple of mesh axis names (tried jointly, then prefixes)
 DEFAULT_RULES: dict[str, Tuple[str, ...]] = {
     "batch": ("pod", "data"),
@@ -37,21 +39,32 @@ DEFAULT_RULES: dict[str, Tuple[str, ...]] = {
 class _Ctx(threading.local):
     mesh: Optional[Mesh] = None
     rules: Optional[dict] = None
+    skip_constraints: bool = False
 
 
 _CTX = _Ctx()
 
 
 @contextlib.contextmanager
-def use_mesh(mesh: Mesh, rules: Optional[dict] = None):
-    """Activate logical sharding (and the jax mesh context) for a region."""
-    prev = (_CTX.mesh, _CTX.rules)
-    _CTX.mesh, _CTX.rules = mesh, dict(DEFAULT_RULES, **(rules or {}))
+def use_mesh(mesh: Mesh, rules: Optional[dict] = None,
+             manual_region: bool = False):
+    """Activate logical sharding (and the jax mesh context) for a region.
+
+    ``manual_region=True`` marks a shard_map body: on legacy jax a
+    partial-auto sharding constraint inside a manual region hard-crashes
+    GSPMD (IsManualSubgroup check), so ``shard`` degrades to identity
+    there -- the constraints are memory-layout hints, not semantics.
+    """
+    prev = (_CTX.mesh, _CTX.rules, _CTX.skip_constraints)
+    _CTX.mesh = mesh
+    _CTX.rules = dict(DEFAULT_RULES, **(rules or {}))
+    _CTX.skip_constraints = (manual_region
+                             and not compat.SUPPORTS_NESTED_MANUAL)
     try:
         with mesh:
             yield
     finally:
-        _CTX.mesh, _CTX.rules = prev
+        _CTX.mesh, _CTX.rules, _CTX.skip_constraints = prev
 
 
 def active_mesh() -> Optional[Mesh]:
@@ -109,13 +122,15 @@ def shard(x, *names: Optional[str]):
         return x
     if len(names) != x.ndim:
         raise ValueError(f"{len(names)} names for rank-{x.ndim} array")
+    if _CTX.skip_constraints:
+        return x
     spec = logical_spec(names, x.shape, mesh, rules)
     # Inside jit/shard_map the constraint must be built against the
     # *abstract* context mesh (whose axis_types reflect Manual regions);
     # the concrete mesh is only used for shape/divisibility decisions.
     try:
-        am = jax.sharding.get_abstract_mesh()
-        target = am if am is not None and am.shape else mesh
+        am = compat.get_abstract_mesh()
+        target = am if am is not None else mesh
     except Exception:  # noqa: BLE001 -- API drift safety
         target = mesh
     return jax.lax.with_sharding_constraint(x, NamedSharding(target, spec))

@@ -33,9 +33,9 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro import compat
 from repro.configs.base import ModelConfig, ParallelConfig
 from repro.core import attacks as attacks_lib
-from repro.core import location, mestimators
 from repro.core import sharded as sharded_lib
 from repro.launch import sharding
 from repro.launch.mesh import agent_axes, num_agents
@@ -221,9 +221,14 @@ def to_named(specs, mesh):
 # Mode A: constraint-driven robust aggregation over stacked agent grads
 # ===========================================================================
 
-def _mm_axis0(flat, num_iters: int):
-    return location.mm_estimate(flat, loss=mestimators.TUKEY,
-                                num_iters=num_iters).estimate
+def _mm_axis0(flat, num_iters: int, use_kernel: bool = False):
+    """All MM aggregation in the train steps goes through the engine
+    (kernels.ops); ``use_kernel`` (ParallelConfig.use_kernel) selects
+    the fused Pallas kernel, else the structure-preserving jnp backend
+    (identical estimator)."""
+    from repro.kernels import ops  # deferred: keep launch import-light
+    return ops.mm_aggregate(flat, num_iters=num_iters,
+                            backend="pallas" if use_kernel else "jnp")
 
 
 def aggregate_stack(grads, mesh, par: ParallelConfig,
@@ -278,7 +283,8 @@ def aggregate_stack(grads, mesh, par: ParallelConfig,
                          for e in spec[1:]]
                 g = jax.lax.with_sharding_constraint(
                     g, NamedSharding(mesh, P("pod", None, *inner)))
-            pod_est = _mm_axis0(jnp.moveaxis(g, 0, 1), par.agg_num_iters)
+            pod_est = _mm_axis0(jnp.moveaxis(g, 0, 1), par.agg_num_iters,
+                                par.use_kernel)
             est = jnp.mean(pod_est, axis=0)
         else:
             g = leaf.astype(jnp.float32)
@@ -291,7 +297,7 @@ def aggregate_stack(grads, mesh, par: ParallelConfig,
             else:
                 raise ValueError(f"unknown aggregation {method!r}")
             g = jax.lax.with_sharding_constraint(g, NamedSharding(mesh, spec))
-            est = _mm_axis0(g, par.agg_num_iters)
+            est = _mm_axis0(g, par.agg_num_iters, par.use_kernel)
         est = est.astype(leaf.dtype)
         return jax.lax.with_sharding_constraint(
             est, NamedSharding(mesh, ospec))
@@ -419,7 +425,9 @@ def constrain_auto(x, spec: P):
     (observed: full 3.9 GiB expert tensors per device on dbrx)."""
     if all(e is None for e in spec):
         return x
-    am = jax.sharding.get_abstract_mesh()
+    if not compat.SUPPORTS_NESTED_MANUAL:
+        return x  # legacy jax: partial-auto constraints unsupported
+    am = compat.get_abstract_mesh()
     return jax.lax.with_sharding_constraint(x, NamedSharding(am, spec))
 
 
@@ -430,17 +438,22 @@ def _model_manual(fn, in_spec: P, out_spec: P):
     directly on auto-sharded operands force SPMD to first all-gather the
     model axis -- observed as full 3.9 GiB per-device expert tensors on
     dbrx.  Running them inside a nested model-manual region keeps every
-    buffer model-sharded end to end."""
-    am = jax.sharding.get_abstract_mesh()
+    buffer model-sharded end to end.  Legacy jax cannot nest a manual
+    region, so the wrapper degrades to identity there (correct, just
+    without the memory win)."""
+    if not compat.SUPPORTS_NESTED_MANUAL:
+        return fn
+    am = compat.get_abstract_mesh()
     if am is None or am.shape.get("model", 1) <= 1:
         return fn
-    return jax.shard_map(fn, in_specs=in_spec, out_specs=out_spec,
-                         axis_names={"model"}, check_vma=False)
+    return compat.shard_map(fn, in_specs=in_spec, out_specs=out_spec,
+                            axis_names={"model"}, check_vma=False)
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3, 4, 5, 6))
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3, 4, 5, 6, 7))
 def fsdp_gather_robust(w, dim: int, axes: tuple, method: str,
-                       num_iters: int, byz: tuple, mspec: P):
+                       num_iters: int, byz: tuple, mspec: P,
+                       use_kernel: bool = False):
     """FSDP layer gather with a robust-aggregating backward.
 
     fwd: all-gather the f32 master shard as bf16 (halves ICI traffic and
@@ -459,13 +472,13 @@ def fsdp_gather_robust(w, dim: int, axes: tuple, method: str,
     return _model_manual(gather_local, mspec, mspec)(w)
 
 
-def _fgr_fwd(w, dim, axes, method, num_iters, byz, mspec):
+def _fgr_fwd(w, dim, axes, method, num_iters, byz, mspec, use_kernel=False):
     # residual-free: master shards are always f32
     return fsdp_gather_robust(w, dim, axes, method, num_iters, byz,
-                              mspec), None
+                              mspec, use_kernel), None
 
 
-def _chunked_mm_axis0(sw, num_iters):
+def _chunked_mm_axis0(sw, num_iters, use_kernel: bool = False):
     """MM over axis 0 of (K, n0, ...) in chunks along n0 (keeps each f32
     temp <= _MM_CHUNK_BYTES; never flattens, so auto-axis sharding of
     trailing dims survives)."""
@@ -481,15 +494,16 @@ def _chunked_mm_axis0(sw, num_iters):
             c = cand
             break
     if c == n0:
-        return _mm_axis0(sw.astype(jnp.float32), num_iters)
+        return _mm_axis0(sw.astype(jnp.float32), num_iters, use_kernel)
     sw2 = sw.reshape((k, n0 // c, c) + sw.shape[2:])
     sw2 = jnp.moveaxis(sw2, 1, 0)            # (n0/c, K, c, ...)
     est = jax.lax.map(
-        lambda sl: _mm_axis0(sl.astype(jnp.float32), num_iters), sw2)
+        lambda sl: _mm_axis0(sl.astype(jnp.float32), num_iters, use_kernel),
+        sw2)
     return est.reshape((n0,) + sw.shape[2:])
 
 
-def _fgr_bwd(dim, axes, method, num_iters, byz, mspec, _res, g):
+def _fgr_bwd(dim, axes, method, num_iters, byz, mspec, use_kernel, _res, g):
     w_dtype = jnp.float32
 
     k = jax.lax.psum(1, axes)   # static (folds at trace time)
@@ -515,7 +529,7 @@ def _fgr_bwd(dim, axes, method, num_iters, byz, mspec, _res, g):
         sh = g2.shape
         g2 = g2.reshape((k, sh[0] // k) + sh[1:])
         sw = jax.lax.all_to_all(g2, axes, split_axis=0, concat_axis=0)
-        est = _chunked_mm_axis0(sw, num_iters).astype(w_dtype)
+        est = _chunked_mm_axis0(sw, num_iters, use_kernel).astype(w_dtype)
         return jnp.moveaxis(est, 0, dim) if dim else est
 
     return (_model_manual(scatter_local, (mspec, P()), mspec)(g, is_mal),)
@@ -526,7 +540,7 @@ fsdp_gather_robust.defvjp(_fgr_fwd, _fgr_bwd)
 
 def make_fsdp_hook(mesh, method: str, num_iters: int,
                    byzantine: Optional[attacks_lib.ByzantineConfig],
-                   dims_tree, mspec_tree):
+                   dims_tree, mspec_tree, use_kernel: bool = False):
     """``dims_tree`` mirrors the *sliced* block structure with the fsdp
     gather dim per leaf (-1 = not sharded).  It must be computed from the
     GLOBAL template shapes -- inside shard_map the leaves are local, and
@@ -544,7 +558,8 @@ def make_fsdp_hook(mesh, method: str, num_iters: int,
         def one(w, d, ms):
             if d < 0:
                 return w
-            return fsdp_gather_robust(w, d, ax, method, num_iters, byz, ms)
+            return fsdp_gather_robust(w, d, ax, method, num_iters, byz, ms,
+                                      use_kernel)
         return jax.tree.map(one, blk, dims_tree, mspec_tree)
 
     return hook
@@ -583,11 +598,11 @@ def make_train_step_fsdp(model_cfg: ModelConfig, par: ParallelConfig,
                                 mesh.shape.get("model", 1))
     mspec_tree = block_mspec_tree(pspecs["blocks"])
     hook = make_fsdp_hook(mesh, par.aggregation, par.agg_num_iters, byzantine,
-                          dims_tree, mspec_tree)
+                          dims_tree, mspec_tree, par.use_kernel)
     a = ax if len(ax) > 1 else ax[0]
 
     def local_step(params, opt_state, batch):
-        with sharding.use_mesh(mesh, {"batch": (), "fsdp": ()}):
+        with sharding.use_mesh(mesh, {"batch": (), "fsdp": ()}, manual_region=True):
             # local batch may be smaller than the configured microbatch
             # count on bigger meshes (e.g. 256/32 agents = 8 local seqs)
             nm = min(par.microbatches, jax.tree.leaves(batch)[0].shape[0])
@@ -632,6 +647,8 @@ def make_train_step_fsdp(model_cfg: ModelConfig, par: ParallelConfig,
                     return sharded_lib.robust_all_reduce(
                         gl, ax if len(ax) > 1 else ax[0],
                         method=par.aggregation,
+                        aggregator="mm_pallas" if par.use_kernel
+                        else "mm_tukey",
                         num_iters=par.agg_num_iters)
 
                 return _model_manual(local, (ms, P()), ms)(g, rest_mal)
@@ -665,7 +682,7 @@ def make_train_step_fsdp(model_cfg: ModelConfig, par: ParallelConfig,
 
     def build(batch_template):
         bspecs = batch_specs(batch_template, mesh)
-        step = jax.shard_map(
+        step = compat.shard_map(
             local_step, mesh=mesh,
             in_specs=(mspecs, ospecs_m, bspecs),
             out_specs=(mspecs, ospecs_m, P()),
@@ -727,12 +744,12 @@ def make_prefill_step(model_cfg: ModelConfig, mesh, *, fsdp: bool = False,
     bspecs = batch_specs(batch_template, mesh)
 
     def local(params, batch):
-        with sharding.use_mesh(mesh, {"batch": (), "fsdp": ()}):
+        with sharding.use_mesh(mesh, {"batch": (), "fsdp": ()}, manual_region=True):
             return M.prefill(params, model_cfg, batch, layer_hook=hook,
                              remat=False)
 
     out_spec = P(ax if len(ax) > 1 else ax[0])
-    return jax.shard_map(local, mesh=mesh, in_specs=(mspecs, bspecs),
+    return compat.shard_map(local, mesh=mesh, in_specs=(mspecs, bspecs),
                          out_specs=out_spec, axis_names=set(ax),
                          check_vma=False)
 
@@ -757,13 +774,13 @@ def make_decode_step(model_cfg: ModelConfig, mesh, *, fsdp: bool = False,
     tok_spec = P(a) if global_batch % num_agents(mesh) == 0 else P(None)
 
     def local(params, tokens, cache):
-        with sharding.use_mesh(mesh, {"batch": (), "fsdp": ()}):
+        with sharding.use_mesh(mesh, {"batch": (), "fsdp": ()}, manual_region=True):
             logits, cache = M.decode_step(params, model_cfg, tokens, cache,
                                           layer_hook=hook)
             next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
             return next_tok, cache
 
-    return jax.shard_map(local, mesh=mesh,
+    return compat.shard_map(local, mesh=mesh,
                          in_specs=(mspecs, tok_spec, cspecs),
                          out_specs=(tok_spec, cspecs), axis_names=set(ax),
                          check_vma=False)

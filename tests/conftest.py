@@ -1,3 +1,18 @@
+"""Shared fixtures + an optional-dependency shim for ``hypothesis``.
+
+The tier-1 suite must collect and run on a bare interpreter.  When the
+real ``hypothesis`` package is unavailable we install a tiny
+deterministic stand-in into ``sys.modules`` *before* the test modules
+import it: ``@given`` draws a fixed number of seeded examples per test
+and ``@settings`` caps that count.  It supports exactly the strategy
+surface the suite uses (``st.integers``, ``st.floats``, ``.map``).
+"""
+
+import functools
+import inspect
+import sys
+import types
+
 import numpy as np
 import pytest
 
@@ -5,3 +20,80 @@ import pytest
 @pytest.fixture(scope="session")
 def rng():
     return np.random.default_rng(0)
+
+
+# ---------------------------------------------------------------------------
+# hypothesis fallback (satellite: tier-1 collection must not need the dep)
+# ---------------------------------------------------------------------------
+
+_STUB_EXAMPLES = 5  # deterministic draws per @given test when stubbed
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example(self, rng):
+        return self._draw(rng)
+
+    def map(self, fn):
+        return _Strategy(lambda rng: fn(self._draw(rng)))
+
+
+def _integers(min_value, max_value):
+    return _Strategy(lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+
+def _floats(min_value, max_value):
+    return _Strategy(lambda rng: float(rng.uniform(min_value, max_value)))
+
+
+def _settings(max_examples=_STUB_EXAMPLES, **_ignored):
+    def deco(fn):
+        fn._stub_max_examples = max_examples
+        return fn
+    return deco
+
+
+def _given(**strategy_kwargs):
+    def deco(fn):
+        n = min(getattr(fn, "_stub_max_examples", _STUB_EXAMPLES),
+                _STUB_EXAMPLES)
+        sig = inspect.signature(fn)
+        kept = [p for name, p in sig.parameters.items()
+                if name not in strategy_kwargs]
+
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            rng = np.random.default_rng(0xC0FFEE)
+            for _ in range(n):
+                drawn = {k: s.example(rng)
+                         for k, s in strategy_kwargs.items()}
+                fn(*args, **kwargs, **drawn)
+
+        # pytest resolves fixtures from the signature: the strategy
+        # kwargs are provided by the loop above, not by fixtures.
+        wrapper.__signature__ = sig.replace(parameters=kept)
+        return wrapper
+    return deco
+
+
+def _install_hypothesis_stub():
+    strategies = types.ModuleType("hypothesis.strategies")
+    strategies.integers = _integers
+    strategies.floats = _floats
+
+    hyp = types.ModuleType("hypothesis")
+    hyp.given = _given
+    hyp.settings = _settings
+    hyp.strategies = strategies
+    hyp.__stub__ = True
+
+    sys.modules["hypothesis"] = hyp
+    sys.modules["hypothesis.strategies"] = strategies
+
+
+try:  # pragma: no cover - exercised implicitly by collection
+    import hypothesis  # noqa: F401
+except ImportError:
+    _install_hypothesis_stub()

@@ -121,6 +121,59 @@ def test_weighted_aggregation_excludes_zero_weight():
         assert float(out[0]) < 10.0, name
 
 
+def test_trimmed_mean_clamps_trim_count():
+    """Regression: beta=0.5 with K=4 trimmed away every row -> NaN."""
+    x = jnp.asarray(np.arange(8.0, dtype=np.float32).reshape(4, 2))
+    out = aggregators.trimmed_mean(x, None, beta=0.5)
+    assert bool(jnp.isfinite(out).all())
+    # clamped to t=1: the two middle rows survive
+    np.testing.assert_allclose(out, x[1:3].mean(axis=0))
+
+
+@pytest.mark.parametrize("beta", [-0.1, 0.6, 1.0])
+def test_trimmed_mean_rejects_nonsensical_beta(beta):
+    x = jnp.ones((4, 2))
+    with pytest.raises(ValueError):
+        aggregators.trimmed_mean(x, None, beta=beta)
+
+
+@pytest.mark.parametrize("name", ["mean", "median", "mm_tukey", "m_huber",
+                                  "geometric_median"])
+@pytest.mark.parametrize("bad", ["zeros", "negative", "nan"])
+def test_invalid_weights_fall_back_to_uniform(name, bad):
+    """Regression: a / sum(a) with all-zero or negative-sum weights
+    produced NaN/garbage; invalid weights now mean uniform."""
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.normal(size=(9, 5)).astype(np.float32))
+    a = {"zeros": np.zeros((9,), np.float32),
+         "negative": -np.ones((9,), np.float32),
+         "nan": np.full((9,), np.nan, np.float32)}[bad]
+    agg = aggregators.get_aggregator(name)
+    out = np.asarray(agg(x, jnp.asarray(a)))
+    assert np.isfinite(out).all(), (name, bad, out)
+    want = np.asarray(agg(x, jnp.full((9,), 1.0 / 9, dtype=jnp.float32)))
+    np.testing.assert_allclose(out, want, atol=1e-5, err_msg=f"{name}/{bad}")
+
+
+def test_weighted_median_zero_weights_finite():
+    from repro.core import location
+    x = jnp.asarray(np.arange(12.0, dtype=np.float32).reshape(6, 2))
+    out = location.weighted_median(x, jnp.zeros((6,)), axis=0)
+    assert bool(jnp.isfinite(out).all())
+
+
+def test_mm_pallas_weighted_matches_mm_tukey():
+    """The kernel aggregator IS the weighted jnp estimator -- no
+    fallback branch, same numbers."""
+    kx, ka = jax.random.split(jax.random.key(13))
+    x = jax.random.normal(kx, (16, 300))
+    x = x.at[-4:].add(50.0)
+    a = jax.random.uniform(ka, (16,), minval=0.05, maxval=1.0)
+    got = aggregators.get_aggregator("mm_pallas")(x, a)
+    want = aggregators.get_aggregator("mm_tukey")(x, a)
+    np.testing.assert_allclose(got, want, atol=1e-5)
+
+
 def test_aggregate_pytree():
     tree = {"a": jnp.ones((4, 3)), "b": {"c": jnp.zeros((4, 2, 2))}}
     out = aggregators.aggregate_pytree(tree, "mm_tukey")

@@ -91,6 +91,22 @@ def test_federated_clean_and_attacked():
         assert float(hist[-1]) < bound, (agg, n_mal, float(hist[-1]))
 
 
+def test_federated_client_weights_kernel_path():
+    """Non-uniform client weights ride into the server aggregator (the
+    weighted Pallas kernel for mm_pallas) and the round still converges."""
+    rng = np.random.default_rng(0)
+    weights = tuple(float(w) for w in rng.uniform(0.5, 2.0, size=32))
+    grad = lambda w, idx, key: _fed_grad(w, idx, key)
+    for agg in ("mm_pallas", "mm_tukey"):
+        cfg = federated.FederatedConfig(
+            num_clients=32, clients_per_round=16, local_steps=3,
+            step_size=0.05, aggregator=agg, client_weights=weights)
+        _, hist = federated.run_federated(
+            grad_fn=grad, config=cfg, w_star=PROB.w_star,
+            num_rounds=80, key=jax.random.key(2))
+        assert float(hist[-1]) < 5e-2, (agg, float(hist[-1]))
+
+
 def _fed_grad(w, idx, key):
     ku, kv = jax.random.split(jax.random.fold_in(key, idx))
     u = jax.random.normal(ku, (10,))

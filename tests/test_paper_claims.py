@@ -61,10 +61,18 @@ def test_c3_ref_robust_and_efficient():
     # robust for every delta
     for d in (1.0, 100.0, 1000.0):
         assert steady(msd_curve("mm_tukey", 1, d)) < 1e-2, d
-    # clean-case efficiency: within 15% of mean-based MSD
-    ref_clean = steady(msd_curve("mm_tukey", 0, 0.0, iters=800))
-    mean_clean = steady(msd_curve("mean", 0, 0.0, iters=800))
-    assert ref_clean < 1.25 * mean_clean, (ref_clean, mean_clean)
+    # clean-case efficiency: REF's steady-state MSD within 25% of the
+    # mean's.  A single 800-iteration run has a noisy steady-state
+    # average (observed per-seed ratios 0.98-1.50 on the same code), so
+    # the band is asserted on the MEDIAN ratio over four seeds; the
+    # sharp estimator-variance version of this claim is
+    # test_aggregators.test_clean_case_efficiency (1500 trials).
+    ratios = []
+    for seed in range(4):
+        ref_clean = steady(msd_curve("mm_tukey", 0, 0.0, iters=800, seed=seed))
+        mean_clean = steady(msd_curve("mean", 0, 0.0, iters=800, seed=seed))
+        ratios.append(ref_clean / mean_clean)
+    assert float(np.median(ratios)) < 1.25, ratios
 
 
 def test_c3_ref_robust_across_contamination_rate():

@@ -17,17 +17,17 @@ SCRIPT = textwrap.dedent("""
     import json
     import jax, jax.numpy as jnp
     from jax.sharding import PartitionSpec as P
+    from repro import compat
     from repro.core import aggregators, sharded
 
-    mesh = jax.make_mesh((8,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = compat.make_mesh((8,), ("data",))
     x = jax.random.normal(jax.random.key(0), (8, 1037))
     x = x.at[-2:].add(500.0)
     ref = aggregators.mm_tukey(x, None)
     mean_ref = jnp.mean(x, axis=0)
 
     def run(method):
-        f = jax.shard_map(
+        f = compat.shard_map(
             lambda v: sharded.robust_all_reduce(v[0], "data", method=method),
             mesh=mesh, in_specs=P("data", None), out_specs=P(None),
             check_vma=False)
@@ -41,7 +41,7 @@ SCRIPT = textwrap.dedent("""
     # dim0-preserving rs path (2D leaf): distinct per-agent values
     stacks = jax.random.normal(jax.random.key(2), (8, 16, 24))
     ref2 = aggregators.mm_tukey(stacks, None)
-    got2 = jax.jit(jax.shard_map(
+    got2 = jax.jit(compat.shard_map(
         lambda v: sharded.rs_mm(v[0], "data"),
         mesh=mesh, in_specs=P("data", None, None), out_specs=P(None),
         check_vma=False))(stacks)
@@ -51,7 +51,7 @@ SCRIPT = textwrap.dedent("""
     tree = {"w": jax.random.normal(jax.random.key(3), (8, 32, 6)),
             "b": jax.random.normal(jax.random.key(4), (8, 11))}
     reft = {k: aggregators.mm_tukey(v, None) for k, v in tree.items()}
-    gott = jax.jit(jax.shard_map(
+    gott = jax.jit(compat.shard_map(
         lambda t: sharded.robust_all_reduce_tree(
             {k: v[0] for k, v in t.items()}, "data", method="rs_mm"),
         mesh=mesh,

@@ -7,6 +7,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro import compat
 from repro.checkpoint import checkpoint
 from repro.data import synthetic
 from repro.launch import sharding
@@ -111,8 +112,7 @@ def test_token_stream_shapes_and_structure():
 # ------------------------------ sharding ----------------------------------
 
 def test_logical_spec_divisibility_fallback():
-    mesh = jax.make_mesh((1,), ("model",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = compat.make_mesh((1,), ("model",))
     # trivially sized mesh: everything replicated
     spec = sharding.logical_spec(["batch", "heads"], (8, 6), mesh, None)
     assert spec == jax.sharding.PartitionSpec(None, None)
@@ -126,6 +126,5 @@ def test_shard_is_identity_outside_mesh():
 
 def test_shard_rank_mismatch():
     with pytest.raises(ValueError):
-        with sharding.use_mesh(jax.make_mesh(
-                (1,), ("model",), axis_types=(jax.sharding.AxisType.Auto,))):
+        with sharding.use_mesh(compat.make_mesh((1,), ("model",))):
             sharding.shard(jnp.ones((2, 2)), "batch")

@@ -23,14 +23,14 @@ SCRIPT = textwrap.dedent("""
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     import json
     import jax, jax.numpy as jnp
+    from repro import compat
     from repro.configs.base import ModelConfig, ParallelConfig
     from repro.core import attacks
     from repro.launch import steps
     from repro.models import model as M
     from repro.optim import optimizers
 
-    mesh = jax.make_mesh((4, 2), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,)*2)
+    mesh = compat.make_mesh((4, 2), ("data", "model"))
     cfg = ModelConfig(name="t", arch_type="dense", num_layers=2, d_model=64,
                       num_heads=4, num_kv_heads=2, d_ff=128, vocab_size=256,
                       qk_norm=True)
