@@ -1,33 +1,50 @@
 """Aggregator micro-benchmark (the paper has no timing table; this is
 the systems-side cost table for EXPERIMENTS.md): wall time per call for
-each aggregator over (K, M), the Pallas kernel (interpret on CPU), and
-the engine's weighted-pytree path -- including a launch-count audit
-proving the whole gradient pytree is aggregated by ONE pallas_call,
-not one per leaf.
+each aggregator over (K, M), the Pallas kernel (interpret on CPU), the
+batched N-neighborhood kernel, and the engine's weighted-pytree path --
+including two structural audits:
+
+  * launch audit: the whole gradient pytree is aggregated by ONE
+    pallas_call, not one per leaf;
+  * traffic audit: at fixed tile sizes the batched kernel fetches the
+    SAME number of input blocks (and bytes) from HBM for every N --
+    the one-residency contract.  The pre-batching kernel streamed the
+    update matrix once per weight column (N x the bytes).
+
+``--json PATH`` writes the rows + audits as BENCH_agg.json so the perf
+trajectory is tracked across PRs; ``--smoke`` shrinks shapes/reps for
+the ci.sh invocation.
 """
 
 from __future__ import annotations
 
+import argparse
+import json
 import time
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import aggregators
+from repro.kernels import mm_aggregate as mk
 from repro.kernels import ops
 
 SHAPES = ((16, 1 << 16), (32, 1 << 18))
+SMOKE_SHAPES = ((8, 1 << 12),)
 AGGS = ("mean", "median", "trimmed_mean", "geometric_median", "krum",
         "m_huber", "mm_tukey")
+SMOKE_AGGS = ("mean", "median", "mm_tukey")
+
 
 # a small transformer-block-shaped gradient pytree, stacked over K agents
-def _grad_tree(k: int):
+def _grad_tree(k: int, scale: int = 1):
     key = jax.random.key(0)
-    mk = lambda i, *s: jax.random.normal(jax.random.fold_in(key, i), (k,) + s)
+    mk_ = lambda i, *s: jax.random.normal(jax.random.fold_in(key, i), (k,) + s)
+    d = 256 // scale
     return {
-        "wq": mk(0, 256, 256), "wk": mk(1, 256, 64), "wv": mk(2, 256, 64),
-        "wo": mk(3, 256, 256), "w_up": mk(4, 256, 1024),
-        "w_down": mk(5, 1024, 256), "ln": mk(6, 256), "bias": mk(7, 256),
+        "wq": mk_(0, d, d), "wk": mk_(1, d, 64), "wv": mk_(2, d, 64),
+        "wo": mk_(3, d, d), "w_up": mk_(4, d, 4 * d),
+        "w_down": mk_(5, 4 * d, d), "ln": mk_(6, d), "bias": mk_(7, d),
     }
 
 
@@ -47,38 +64,89 @@ def count_pallas_calls(fn, *args) -> int:
 
 
 def _time(fn, *args, reps=5):
-    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
-        jax.block_until_ready(fn(*args))
+    # warm up with a single call and block on the held result (calling
+    # twice -- once for an isinstance check, once discarded -- skewed
+    # the first-rep cost before)
+    out = fn(*args)
+    if isinstance(out, tuple):
+        out[0].block_until_ready()
+    else:
+        jax.block_until_ready(out)
     t0 = time.perf_counter()
     for _ in range(reps):
         jax.block_until_ready(fn(*args))
     return (time.perf_counter() - t0) / reps * 1e6
 
 
-def main() -> list[tuple]:
+def traffic_audit(k: int, m: int, ns=(1, 8, 32), block_m: int = 256) -> dict:
+    """One-residency audit via the kernel's own launch plan: input-block
+    fetches and bytes must be N-independent at fixed tile sizes."""
+    plans = {n: mk.launch_plan(k, m, n, block_m=block_m) for n in ns}
+    fetches = {n: p.input_block_fetches for n, p in plans.items()}
+    in_bytes = {n: p.input_bytes for n, p in plans.items()}
+    ok = len(set(fetches.values())) == 1 and len(set(in_bytes.values())) == 1
+    assert ok, f"input stream depends on N: {fetches} / {in_bytes}"
+    n_max = max(ns)
+    return {
+        "shape": f"K{k}_M{m}",
+        "block_m": block_m,
+        "input_block_fetches_by_n": {str(n): fetches[n] for n in ns},
+        "input_bytes_by_n": {str(n): in_bytes[n] for n in ns},
+        "n_independent": ok,
+        # what the pre-batching (N, M, K) grid would have streamed at N_max
+        "pre_fix_input_bytes_at_n_max": n_max * in_bytes[n_max],
+        "traffic_reduction_at_n_max": n_max,
+    }
+
+
+def main(smoke: bool = False) -> tuple[list[tuple], list[dict]]:
+    shapes = SMOKE_SHAPES if smoke else SHAPES
+    aggs = SMOKE_AGGS if smoke else AGGS
+    reps = 2 if smoke else 5
     rows = []
-    for k, m in SHAPES:
+    audits = []
+    for k, m in shapes:
         x = jax.random.normal(jax.random.key(0), (k, m))
         x = x.at[-k // 4:].add(100.0)
-        for name in AGGS:
+        plan = mk.launch_plan(k, m, 1)
+        fused_bytes = plan.input_bytes + plan.weight_bytes + plan.output_bytes
+        for name in aggs:
             kw = {"num_malicious": k // 4} if name == "krum" else {}
             agg = aggregators.get_aggregator(name, **kw)
             f = jax.jit(lambda v, a=agg: a(v, None))
-            us = _time(f, x)
+            us = _time(f, x, reps=reps)
             # derived: throughput in M coords / s
-            rows.append((f"agg/{name}/K{k}_M{m}", us, m / us))
+            rows.append((f"agg/{name}/K{k}_M{m}", us, m / us, None, 0))
         f = jax.jit(lambda v: ops.mm_aggregate(v, interpret=True))
-        us = _time(f, x)
-        rows.append((f"agg/mm_pallas_interp/K{k}_M{m}", us, m / us))
+        us = _time(f, x, reps=reps)
+        rows.append((f"agg/mm_pallas_interp/K{k}_M{m}", us, m / us,
+                     fused_bytes, 1))
         # weighted single-array kernel path (Eq. 13's a_k inside the kernel)
         a = jnp.linspace(0.5, 1.5, k)
         fw = jax.jit(lambda v, w: ops.mm_aggregate(v, w, interpret=True))
-        us = _time(fw, x, a)
-        rows.append((f"agg/mm_pallas_weighted/K{k}_M{m}", us, m / us))
+        us = _time(fw, x, a, reps=reps)
+        rows.append((f"agg/mm_pallas_weighted/K{k}_M{m}", us, m / us,
+                     fused_bytes, 1))
+        # batched diffusion path: all N neighborhoods, one residency
+        for n in (4,) if smoke else (8, 32):
+            an = jax.random.uniform(jax.random.key(1), (k, n),
+                                    minval=0.1, maxval=1.0)
+            pn = mk.launch_plan(k, m, n)
+            fb = jax.jit(
+                lambda v, w: ops.mm_aggregate_batched(v, w, interpret=True))
+            launches = count_pallas_calls(lambda v, w: ops.mm_aggregate_batched(
+                v, w, interpret=True), x, an)
+            assert launches == 1, launches
+            us = _time(fb, x, an, reps=reps)
+            rows.append((f"agg/mm_pallas_batched/K{k}_M{m}_N{n}", us,
+                         n * m / us,
+                         pn.input_bytes + pn.weight_bytes + pn.output_bytes,
+                         launches))
+        audits.append(traffic_audit(k, m))
 
     # weighted-pytree engine path: the whole gradient tree in ONE launch
-    for k in (8, 32):
-        tree = _grad_tree(k)
+    for k in (8,) if smoke else (8, 32):
+        tree = _grad_tree(k, scale=4 if smoke else 1)
         a = jnp.linspace(0.5, 1.5, k)
         n_leaves = len(jax.tree.leaves(tree))
         m_total = sum(int(l.size) // k for l in jax.tree.leaves(tree))
@@ -86,13 +154,48 @@ def main() -> list[tuple]:
         launches = count_pallas_calls(
             lambda t, w: eng.aggregate_tree(t, w), tree, a)
         assert launches == 1, f"expected ONE kernel launch, got {launches}"
+        pt = mk.launch_plan(k, m_total, 1)
         ft = jax.jit(lambda t, w: eng.aggregate_tree(t, w))
-        us = _time(ft, tree, a)
+        us = _time(ft, tree, a, reps=reps)
         rows.append((f"agg/engine_tree_weighted/K{k}_leaves{n_leaves}"
-                     f"_M{m_total}_launches{launches}", us, m_total / us))
-    return rows
+                     f"_M{m_total}_launches{launches}", us, m_total / us,
+                     pt.input_bytes + pt.weight_bytes + pt.output_bytes,
+                     launches))
+    return rows, audits
+
+
+def write_json(path: str, rows, audits, smoke: bool) -> None:
+    payload = {
+        "bench": "agg",
+        "mode": "smoke" if smoke else "full",
+        "backend": jax.default_backend(),
+        "rows": [
+            {"name": name, "us_per_call": round(us, 2),
+             "coords_per_us": round(thru, 6),
+             "modeled_hbm_bytes": bytes_, "pallas_calls": calls}
+            for name, us, thru, bytes_, calls in rows
+        ],
+        "traffic_audit": audits,
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
 
 
 if __name__ == "__main__":
-    for name, us, derived in main():
-        print(f"{name},{us:.2f},{derived:.6g}")
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small shapes / few reps (ci.sh)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write BENCH_agg.json-style output")
+    ns = ap.parse_args()
+    rows_, audits_ = main(smoke=ns.smoke)
+    for name, us, thru, bytes_, calls in rows_:
+        print(f"{name},{us:.2f},{thru:.6g}")
+    for a_ in audits_:
+        print(f"audit/{a_['shape']}: fetches_by_n="
+              f"{a_['input_block_fetches_by_n']} n_independent="
+              f"{a_['n_independent']}")
+    if ns.json:
+        write_json(ns.json, rows_, audits_, ns.smoke)
+        print(f"wrote {ns.json}")

@@ -1,6 +1,14 @@
 """Pallas MM-aggregation kernel benchmark (interpret mode on CPU --
 wall-clock is indicative only; the structural win is HBM-residency
-fusion, quantified as modeled bytes moved)."""
+fusion, quantified as modeled bytes moved).
+
+The batched rows quantify the one-residency fix: the pre-fix kernel
+put the N weight-column axis in the launch grid and re-streamed the
+whole (K, M) update matrix once per column (``one_residency=False``);
+the current kernel batches N in the kernel body and streams each input
+tile exactly once (``one_residency=True``) -- an N x input-traffic
+reduction for diffusion-sized N.
+"""
 
 from __future__ import annotations
 
@@ -20,13 +28,24 @@ def _time(fn, x, reps=3):
     return (time.perf_counter() - t0) / reps * 1e6
 
 
-def modeled_hbm_bytes(k: int, m: int, fused: bool) -> int:
-    """bytes moved per aggregation: fused = 1 read + 1 write of the tile;
-    unfused jnp = two sorts (r+w each), T=10 IRLS passes (r each)."""
+def modeled_hbm_bytes(k: int, m: int, fused: bool, n: int = 1,
+                      one_residency: bool = True) -> int:
+    """Bytes moved per aggregation of (K, M) f32 against N weight columns.
+
+    fused + one_residency : 1 read of the tile + weights + N-row write
+                            (the current batched kernel)
+    fused, not one_resid.  : N reads of the tile (pre-fix grid that
+                            re-streamed the input per weight column)
+    unfused jnp            : per column, two sorts (r+w each) and T=10
+                            IRLS passes (r each)
+    """
     tile = k * m * 4
+    weights = k * n * 4 if n > 1 else 0
+    out = n * m * 4
     if fused:
-        return tile + m * 4
-    return 2 * 2 * tile + 10 * tile + m * 4
+        reads = tile if one_residency else n * tile
+        return reads + weights + out
+    return n * (2 * 2 * tile + 10 * tile) + weights + out
 
 
 def main() -> list[tuple]:
@@ -40,6 +59,19 @@ def main() -> list[tuple]:
                      modeled_hbm_bytes(k, m, True)))
         rows.append((f"kernel/mm_ref_jnp/K{k}_M{m}", t_ref,
                      modeled_hbm_bytes(k, m, False)))
+        # batched traffic model: the tentpole's win, pre- vs post-fix
+        # (timing capped at N=16 to keep interpret-mode wall clock sane;
+        # the modeled ratio scales linearly in N either way)
+        for n in sorted({8, min(16, k)}):
+            pre = modeled_hbm_bytes(k, m, True, n=n, one_residency=False)
+            post = modeled_hbm_bytes(k, m, True, n=n, one_residency=True)
+            a = jax.random.uniform(jax.random.key(1), (k, n),
+                                   minval=0.1, maxval=1.0)
+            t_b = _time(jax.jit(
+                lambda v, w=a: ops.mm_aggregate_batched(v, w,
+                                                        interpret=True)), x)
+            rows.append((f"kernel/mm_pallas_batched/K{k}_M{m}_N{n}"
+                         f"_traffic_x{pre / post:.1f}", t_b, post))
     return rows
 
 

@@ -1,9 +1,14 @@
 #!/usr/bin/env bash
-# Tier-1 verification: the whole suite, fail-fast, quiet.
+# Tier-1 verification: the whole suite, fail-fast, quiet -- then a
+# smoke run of the aggregation benchmark that emits BENCH_agg.json
+# (shape -> µs/call + modeled HBM bytes + pallas_call count, plus the
+# one-residency traffic audit) so the perf trajectory is tracked from
+# every CI run onward.
 # (pyproject's pytest pythonpath handles src/ resolution; the explicit
 # PYTHONPATH export keeps the command working for tools that bypass
 # pytest's ini, e.g. the subprocess-based multi-device tests.)
 set -euo pipefail
 cd "$(dirname "$0")"
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
-exec python -m pytest -x -q "$@"
+python -m pytest -x -q "$@"
+python benchmarks/agg_bench.py --smoke --json BENCH_agg.json

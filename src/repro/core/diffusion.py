@@ -78,7 +78,12 @@ def diffusion_step(
 
     if config.aggregator == "mm_pallas":
         # fused-kernel path: ALL K neighborhood columns (the a_{.k} of
-        # Eq. 15, arbitrary weights) in ONE batched kernel launch.
+        # Eq. 15, arbitrary weights) in ONE batched kernel launch that
+        # streams the (K, M) update matrix from HBM exactly once -- the
+        # N weight columns are batched in the kernel body, not the
+        # grid, so network size never multiplies the HBM traffic.
+        # Block sizes come from kernels.tuning (cached autotuner winner
+        # or VMEM heuristic) unless pinned via agg_kwargs.
         from repro.kernels import ops  # deferred: keep core import-light
         w_next = ops.mm_aggregate_batched(
             phi_sent, combination, **dict(config.agg_kwargs))  # (K, M)

@@ -1,13 +1,17 @@
 """Pallas TPU kernels for the perf-critical aggregation hot-spot.
 
 mm_aggregate.py -- fused (weighted) median/MAD/Tukey-IRLS over (K, M)
-                   tiles, batched over neighborhood weight columns
+                   tiles; ALL N neighborhood weight columns are batched
+                   in the kernel body, so the update matrix is streamed
+                   from HBM exactly once per launch (one-residency)
 ops.py          -- AggregationEngine: the repo-wide aggregation entry
                    point (array / batched / whole-pytree single launch)
+tuning.py       -- block_m/block_k autotuner + heuristic; the engine
+                   consults its cache by default
 ref.py          -- pure-jnp oracle (tests assert kernel == ref)
 """
 
-from repro.kernels import mm_aggregate, ops, ref  # noqa: F401
+from repro.kernels import mm_aggregate, ops, ref, tuning  # noqa: F401
 from repro.kernels.ops import (  # noqa: F401
     AggregationEngine,
     get_engine,

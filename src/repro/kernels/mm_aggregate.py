@@ -12,41 +12,55 @@ combination weights a (Eq. 10/13; uniform a recovers Eq. 8):
 A naive jnp composition round-trips HBM ~3+T times (two sorts, T
 weighted reductions).  The kernel fuses *everything* into one VMEM
 residency per (K, bm) tile: the agent axis K is small (the mesh's data
-axis, <= 64 here), so a full tile of K rows x bm=512 lanes sits in a
-few hundred KB of VMEM, and the whole estimate is computed before the
-tile is written back once.
+axis, <= 64 here), so a full tile of K rows x bm lanes sits in a few
+hundred KB of VMEM, and the whole estimate is computed before the tile
+is written back once.
 
 TPU adaptation notes (vs a GPU port):
-  * No `sort` primitive is needed: K is *static*, so the median is an
-    odd-even transposition network (K_pad passes of min/max on
-    sublane-reshaped registers) -- pure VPU ops, no data-dependent
-    control flow.  The weighted variant carries the weight rows through
-    the same network and selects the cumulative-weight-0.5 crossing.
-  * K is padded to the next block multiple with +inf sentinel rows
-    (weight 0); the median/MAD read fixed ranks (K-1)//2 and K//2 of
-    the sorted tile, so sentinels never enter.  IRLS masks sentinel
-    rows explicitly (0 * inf = nan otherwise).
-  * m is tiled in multiples of 128 lanes (bm defaults to 512); the
-    launcher pads M with ZERO columns (sentinel +inf columns would make
-    the in-kernel MAD compute inf - inf = nan) and strips the pad.
+  * No `sort` primitive is needed: K is *static*, so the median is a
+    bitonic sorting network (O(K log^2 K) compare-exchange passes of
+    min/max on sublane-reshaped registers) -- pure VPU ops, no
+    data-dependent control flow.  One shared network serves the plain
+    sort, the deviation (MAD) sort, and the weighted variant, which
+    carries all N weight planes through the value comparisons and
+    selects the cumulative-weight-0.5 crossing per plane.
+  * The network wants a power-of-two row count, so the sort operand is
+    topped up (in registers, never in HBM) with +inf sentinel rows of
+    weight 0; the median/MAD read fixed ranks (K-1)//2 and K//2 of the
+    sorted tile, so sentinels never enter.  IRLS masks sentinel rows
+    explicitly (0 * inf = nan otherwise).
+  * m is tiled in multiples of 128 lanes; the launcher pads M with ZERO
+    columns (sentinel +inf columns would make the in-kernel MAD compute
+    inf - inf = nan) and strips the pad.
   * Compute is float32 internally regardless of input dtype (bf16
     gradients upcast per tile, bf16 written back -- matches the
     reference).
 
-Grid: (N, M_pad // bm, K_pad // bk) -- N weight columns (batched
-neighborhoods; 1 for a single aggregate), M tiles, and a streamed K
-axis: each (bk, bm) input block is DMA'd into a persistent
-(K_pad, bm) VMEM scratch accumulator and the estimate is computed on
-the last K step, so K larger than a single pipeline block still works.
+ONE-RESIDENCY BATCHING (grid and streaming).  The launch grid is
+(M_pad // bm, K_pad // bk): each (bk, bm) input block is DMA'd into a
+persistent (K_pad, bm) VMEM scratch accumulator, and on the last K step
+ALL N neighborhood estimates (the weight columns of a (K, N) combining
+matrix) are computed from that single residency.  The N axis lives in
+the kernel BODY, not the launch grid, so the number of HBM fetches of
+the update matrix is (M_pad/bm) * (K_pad/bk) -- independent of N.  The
+pre-batching kernel ran grid (N, M/bm, K/bk) and re-streamed the whole
+(K, M) matrix once per weight column: an N x traffic overhead for
+diffusion rounds (N = graph size).  ``launch_plan`` is the single
+source of truth for the grid/tile geometry and the modeled traffic; the
+benchmarks audit it.
+
+Block sizes default to ``kernels.tuning`` (cached autotuner winner, or
+a VMEM-budget heuristic when no measurement is cached).
 """
 
 from __future__ import annotations
 
 import functools
-from typing import Optional, Tuple
+from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
@@ -57,63 +71,78 @@ _SCALE_FLOOR = 1e-12
 _MAD_CONSISTENCY = 1.4826022185056018
 
 
-def _oddeven_sort_rows(x: jnp.ndarray) -> jnp.ndarray:
-    """Sort along axis 0 (static, even length) by odd-even transposition.
+def next_pow2(n: int) -> int:
+    """Smallest power of two >= n (>= 2, the minimum network size)."""
+    p = 2
+    while p < n:
+        p *= 2
+    return p
 
-    P passes of compare-exchange on adjacent rows; all shapes static,
-    lowers to min/max + sublane reshapes only.
+
+def _bitonic_stage(x, carries, *, j: int, size: int):
+    """One compare-exchange pass of the bitonic network.
+
+    Partners are rows i and i^j; a block of ``size`` rows sorts
+    descending iff bit log2(size) of its base index is set (the
+    standard iterative bitonic schedule).  All decisions are made on
+    ``x``; every array in ``carries`` is swapped with the same mask, so
+    carried planes follow the per-column value permutation exactly.
     """
     p = x.shape[0]
-    assert p % 2 == 0, "row count must be padded to even"
-    for step in range(p):
-        if step % 2 == 0:
-            pairs = x.reshape(p // 2, 2, x.shape[1])
-            lo = jnp.minimum(pairs[:, 0], pairs[:, 1])
-            hi = jnp.maximum(pairs[:, 0], pairs[:, 1])
-            x = jnp.stack([lo, hi], axis=1).reshape(p, x.shape[1])
-        elif p > 2:
-            mid = x[1:p - 1].reshape((p - 2) // 2, 2, x.shape[1])
-            lo = jnp.minimum(mid[:, 0], mid[:, 1])
-            hi = jnp.maximum(mid[:, 0], mid[:, 1])
-            middle = jnp.stack([lo, hi], axis=1).reshape(p - 2, x.shape[1])
-            x = jnp.concatenate([x[:1], middle, x[p - 1:]], axis=0)
-    return x
-
-
-def _oddeven_sort_rows_paired(
-    x: jnp.ndarray, w: jnp.ndarray
-) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Joint odd-even sort: order by ``x``, carrying ``w`` along.
-
-    The compare-exchange swaps both arrays on the x-comparison, so the
-    output weight rows follow the per-column value permutation (ties
-    keep their original order, matching a stable argsort *for the
-    selected value* -- tied values are interchangeable).
-    """
-    p = x.shape[0]
-    assert p % 2 == 0, "row count must be padded to even"
-
-    def cmpswap(x0, x1, w0, w1):
+    g = p // (2 * j)
+    rest = x.shape[1:]
+    xr = x.reshape((g, 2, j) + rest)
+    x0, x1 = xr[:, 0], xr[:, 1]
+    # direction per 2j-block: bit `size` of the block's base row index.
+    # Folded to a static bool when uniform over the pass; otherwise an
+    # in-kernel iota (pallas kernels cannot capture trace constants).
+    desc_np = ((np.arange(g) * 2 * j) & size) != 0
+    if not desc_np.any():
         swap = x0 > x1
-        return (jnp.where(swap, x1, x0), jnp.where(swap, x0, x1),
-                jnp.where(swap, w1, w0), jnp.where(swap, w0, w1))
+    elif desc_np.all():
+        swap = ~(x0 > x1)
+    else:
+        gi = jax.lax.broadcasted_iota(
+            jnp.int32, (g,) + (1,) * (len(rest) + 1), 0)
+        desc = ((gi * (2 * j)) & size) != 0
+        swap = (x0 > x1) ^ desc
+    x = jnp.stack([jnp.where(swap, x1, x0), jnp.where(swap, x0, x1)],
+                  axis=1).reshape((p,) + rest)
+    out_carries = []
+    for w in carries:
+        extra = w.ndim - len(rest) - 1   # axes inserted after the row axis
+        ws = swap.reshape(swap.shape[:2] + (1,) * extra + swap.shape[2:])
+        wr = w.reshape((g, 2, j) + w.shape[1:])
+        w0, w1 = wr[:, 0], wr[:, 1]
+        out_carries.append(
+            jnp.stack([jnp.where(ws, w1, w0), jnp.where(ws, w0, w1)],
+                      axis=1).reshape(w.shape))
+    return x, tuple(out_carries)
 
-    for step in range(p):
-        if step % 2 == 0:
-            xp = x.reshape(p // 2, 2, x.shape[1])
-            wp = w.reshape(p // 2, 2, w.shape[1])
-            lo, hi, wlo, whi = cmpswap(xp[:, 0], xp[:, 1], wp[:, 0], wp[:, 1])
-            x = jnp.stack([lo, hi], axis=1).reshape(p, x.shape[1])
-            w = jnp.stack([wlo, whi], axis=1).reshape(p, w.shape[1])
-        elif p > 2:
-            xm = x[1:p - 1].reshape((p - 2) // 2, 2, x.shape[1])
-            wm = w[1:p - 1].reshape((p - 2) // 2, 2, w.shape[1])
-            lo, hi, wlo, whi = cmpswap(xm[:, 0], xm[:, 1], wm[:, 0], wm[:, 1])
-            xmid = jnp.stack([lo, hi], axis=1).reshape(p - 2, x.shape[1])
-            wmid = jnp.stack([wlo, whi], axis=1).reshape(p - 2, w.shape[1])
-            x = jnp.concatenate([x[:1], xmid, x[p - 1:]], axis=0)
-            w = jnp.concatenate([w[:1], wmid, w[p - 1:]], axis=0)
-    return x, w
+
+def _bitonic_sort_rows(x: jnp.ndarray, carries: Tuple[jnp.ndarray, ...] = ()
+                       ) -> Tuple[jnp.ndarray, Tuple[jnp.ndarray, ...]]:
+    """Sort along axis 0 (static power-of-two length) by a bitonic
+    network, permuting every array in ``carries`` along.
+
+    O(K log^2 K) compare-exchange passes, all static min/max + sublane
+    reshapes -- pure VPU work.  ``carries`` may have extra axes between
+    the row axis and the trailing lane axes (e.g. (K, N, bm) weight
+    planes against (K, bm) values); the swap mask broadcasts across
+    them.  Ties keep an arbitrary but x-consistent order: tied values
+    are interchangeable, so every consumer (median ranks, cumulative
+    weight crossing) is permutation-invariant within a tie group.
+    """
+    p = x.shape[0]
+    assert p >= 2 and p & (p - 1) == 0, "row count must be a power of two"
+    size = 2
+    while size <= p:
+        j = size // 2
+        while j >= 1:
+            x, carries = _bitonic_stage(x, carries, j=j, size=size)
+            j //= 2
+        size *= 2
+    return x, carries
 
 
 def _median_rows(x_sorted: jnp.ndarray, k: int) -> jnp.ndarray:
@@ -124,73 +153,118 @@ def _median_rows(x_sorted: jnp.ndarray, k: int) -> jnp.ndarray:
     return 0.5 * (lo + hi)
 
 
-def _weighted_median_rows(xs: jnp.ndarray, ws: jnp.ndarray) -> jnp.ndarray:
-    """Weighted median of an ascending-sorted tile: the first value whose
-    cumulative (normalized) weight reaches 1/2.  Sentinel rows carry
-    weight 0 and sort to the end, so they are never selected."""
+def _weighted_median_planes(xs: jnp.ndarray, ws: jnp.ndarray) -> jnp.ndarray:
+    """Weighted medians of an ascending-sorted tile, one per weight plane.
+
+    xs is (P, bm) sorted values; ws is (P, N, bm) carried (normalized)
+    weight planes.  Per plane, select the first value whose cumulative
+    weight reaches 1/2.  Sentinel rows carry weight 0 and sort to the
+    end, so they are never selected.  Returns (N, bm).
+    """
     cw = jnp.cumsum(ws, axis=0)
     prev = jnp.concatenate([jnp.zeros_like(cw[:1]), cw[:-1]], axis=0)
     sel = (cw >= 0.5) & (prev < 0.5)
-    return jnp.sum(jnp.where(sel, xs, 0.0), axis=0)
+    return jnp.sum(jnp.where(sel, xs[:, None, :], 0.0), axis=0)
 
 
 def _mm_kernel(x_ref, a_ref, o_ref, xs_ref, *, k: int, block_k: int,
                num_iters: int, c: float, weighted: bool):
-    """Grid (N, M/bm, K_pad/bk): stream K blocks into the VMEM scratch
-    accumulator, compute the full fused estimate on the last K step."""
-    ki = pl.program_id(2)
-    nk = pl.num_programs(2)
+    """Grid (M/bm, K_pad/bk): stream K blocks into the VMEM scratch
+    accumulator; on the last K step compute ALL N estimates from that
+    one residency (the N axis is a kernel-body batch, not a grid axis).
+    """
+    ki = pl.program_id(1)
+    nk = pl.num_programs(1)
     xs_ref[pl.ds(ki * block_k, block_k), :] = x_ref[...].astype(jnp.float32)
 
     @pl.when(ki == nk - 1)
     def _compute():
         xp = xs_ref[...]                             # (K_pad, bm), pads=+inf
+        k_pad, bm = xp.shape
+        n_out = a_ref.shape[1]
+        p = next_pow2(k_pad)
+        if p != k_pad:    # top up to the network size, in registers only
+            xp = jnp.concatenate(
+                [xp, jnp.full((p - k_pad, bm), jnp.inf, jnp.float32)], axis=0)
         valid = (jax.lax.broadcasted_iota(jnp.int32, xp.shape, 0) < k)
         x = jnp.where(valid, xp, 0.0)                # masked values for IRLS
-        # normalized combination weights; sentinel rows are 0
-        a = jnp.where(valid, jnp.broadcast_to(
-            a_ref[...].astype(jnp.float32), xp.shape), 0.0)
+        # normalized combination weight columns; sentinel rows are 0
+        a = a_ref[...].astype(jnp.float32)           # (K_pad, N)
+        if p != k_pad:
+            a = jnp.concatenate(
+                [a, jnp.zeros((p - k_pad, n_out), jnp.float32)], axis=0)
 
-        # --- robust init: (weighted) median + MAD ---
+        # --- robust init: (weighted) median + MAD, one shared sort ---
         if weighted:
-            xs, ws = _oddeven_sort_rows_paired(xp, a)
-            med = _weighted_median_rows(xs, ws)      # (bm,)
+            # carry every weight plane through the single value sort
+            planes = jnp.broadcast_to(a[:, :, None], (p, n_out, bm))
+            xs, (ws,) = _bitonic_sort_rows(xp, (planes,))
+            med = _weighted_median_planes(xs, ws)    # (N, bm)
         else:
-            xs = _oddeven_sort_rows(xp)
-            med = _median_rows(xs, k)                # (bm,)
-        dev = jnp.where(valid, jnp.abs(xp - med[None]), jnp.inf)
-        ds = _oddeven_sort_rows(dev)
+            xs, _ = _bitonic_sort_rows(xp)
+            med = _median_rows(xs, k)[None]          # (1, bm)
+        # MAD is the plain median of |x - med_n| (matches the oracle);
+        # the deviations differ per neighborhood, so sort all N planes
+        # at once -- still a single network, trailing dims (N, bm).
+        dev = jnp.where(valid[:, None, :],
+                        jnp.abs(x[:, None, :] - med[None]), jnp.inf)
+        ds, _ = _bitonic_sort_rows(dev)
         scale = jnp.maximum(_MAD_CONSISTENCY * _median_rows(ds, k),
-                            _SCALE_FLOOR)
+                            _SCALE_FLOOR)            # (N, bm)
 
-        # --- efficient refinement: fixed-T weighted Tukey IRLS ---
+        # --- efficient refinement: fixed-T weighted Tukey IRLS, all N ---
         c2 = jnp.float32(c * c)
+        xb = x[:, None, :]                           # (P, 1, bm)
+        aw = a[:, :, None]                           # (P, N, 1), 0 on pads
 
         def body(t, mu):
-            y = (x - mu[None]) / scale[None]
+            y = (xb - mu[None]) / scale[None]
             u = jnp.clip(1.0 - (y * y) / c2, 0.0, 1.0)
-            w = a * (u * u)                          # a_k * b_k, 0 on pads
-            num = jnp.sum(w * x, axis=0)
+            w = aw * (u * u)                         # a_k * b_k
+            num = jnp.sum(w * xb, axis=0)
             den = jnp.sum(w, axis=0)
             safe = den > _SCALE_FLOOR
             return jnp.where(safe, num / jnp.where(safe, den, 1.0), mu)
 
         mu = jax.lax.fori_loop(0, num_iters, body, med)
-        o_ref[...] = mu[None].astype(o_ref.dtype)
+        o_ref[...] = mu.astype(o_ref.dtype)
 
 
-def _pad_inputs(
-    x: jnp.ndarray, a: jnp.ndarray, *, block_m: int, block_k: Optional[int]
-) -> Tuple[jnp.ndarray, jnp.ndarray, int]:
-    """Pad (K, M) values and (K, N) weights for the kernel grid.
+class LaunchPlan(NamedTuple):
+    """Static geometry + modeled HBM traffic of one batched launch.
 
-    K is padded to a multiple of the (even) K block with +inf sentinel
-    rows (weight 0).  M is padded to a block multiple with ZERO columns:
-    a non-finite M pad would flow through the in-kernel MAD as
-    inf - inf = nan (the pre-fix behavior); zero columns are inert
-    (median 0, scale floored, IRLS exact).
+    Computed by ``launch_plan`` -- the same code path ``_launch`` uses
+    to configure the pallas_call -- so benchmarks and tests audit the
+    kernel that actually runs, not a parallel model.
+    ``input_block_fetches`` counts (bk, bm) update-matrix blocks DMA'd
+    from HBM; it is independent of ``n_out`` by construction (the N axis
+    is not a grid axis).
     """
-    k, m = x.shape
+    grid: Tuple[int, int]
+    block_m: int
+    block_k: int
+    k_pad: int
+    m_total: int
+    n_out: int
+    input_block_fetches: int
+    input_bytes: int
+    weight_bytes: int
+    output_bytes: int
+
+
+def launch_plan(k: int, m: int, n: int = 1, *,
+                dtype=jnp.float32,
+                block_m: Optional[int] = None,
+                block_k: Optional[int] = None) -> LaunchPlan:
+    """Resolve tile sizes (via kernels.tuning when unset) and derive the
+    grid and per-launch modeled HBM traffic for a (K, M) x (K, N) run."""
+    if block_m is None or block_k is None:
+        from repro.kernels import tuning  # deferred: tuning times _launch
+        bm_t, bk_t = tuning.get_blocks(k, m, n=n, dtype=dtype)
+        if block_m is None:
+            block_m = bm_t
+        if block_k is None:
+            block_k = bk_t
     if block_k is None:
         bk = k + (k % 2)
     else:
@@ -198,7 +272,35 @@ def _pad_inputs(
             raise ValueError(f"block_k must be positive and even, got {block_k}")
         bk = block_k
     k_pad = ((k + bk - 1) // bk) * bk
-    m_pad = (-m) % block_m
+    m_total = m + ((-m) % block_m)
+    grid = (m_total // block_m, k_pad // bk)
+    fetches = grid[0] * grid[1]
+    itemsize = jnp.dtype(dtype).itemsize
+    return LaunchPlan(
+        grid=grid, block_m=block_m, block_k=bk, k_pad=k_pad,
+        m_total=m_total, n_out=n,
+        input_block_fetches=fetches,
+        input_bytes=fetches * bk * block_m * itemsize,
+        weight_bytes=k_pad * n * 4,
+        output_bytes=n * m_total * itemsize,
+    )
+
+
+def _pad_inputs(
+    x: jnp.ndarray, a: jnp.ndarray, *, plan: LaunchPlan
+) -> Tuple[jnp.ndarray, jnp.ndarray, int]:
+    """Pad (K, M) values and (K, N) weights to the plan's grid geometry.
+
+    K is padded to a multiple of the (even) K block with +inf sentinel
+    rows (weight 0); the kernel tops the sort operand up to the next
+    power of two in registers.  M is padded to a block multiple with
+    ZERO columns: a non-finite M pad would flow through the in-kernel
+    MAD as inf - inf = nan (the pre-fix behavior); zero columns are
+    inert (median 0, scale floored, IRLS exact).
+    """
+    k, m = x.shape
+    bk, k_pad = plan.block_k, plan.k_pad
+    m_pad = plan.m_total - m
 
     xp = x
     if k_pad != k:
@@ -221,7 +323,7 @@ def _launch(
     weighted: bool,
     num_iters: int,
     c: float,
-    block_m: int,
+    block_m: Optional[int],
     block_k: Optional[int],
     interpret: Optional[bool],
 ) -> jnp.ndarray:
@@ -238,21 +340,23 @@ def _launch(
     if weighted:
         a = location.normalize_weights(a, dtype=jnp.float32)
     n_out = a.shape[1]
-    xp, ap, bk = _pad_inputs(x, a, block_m=block_m, block_k=block_k)
+    plan = launch_plan(k, m, n_out, dtype=x.dtype,
+                       block_m=block_m, block_k=block_k)
+    xp, ap, bk = _pad_inputs(x, a, plan=plan)
     k_pad, m_total = xp.shape
 
     kernel = functools.partial(_mm_kernel, k=k, block_k=bk,
                                num_iters=num_iters, c=c, weighted=weighted)
     out = pl.pallas_call(
         kernel,
-        grid=(n_out, m_total // block_m, k_pad // bk),
+        grid=plan.grid,
         in_specs=[
-            pl.BlockSpec((bk, block_m), lambda n, mi, ki: (ki, mi)),
-            pl.BlockSpec((k_pad, 1), lambda n, mi, ki: (0, n)),
+            pl.BlockSpec((bk, plan.block_m), lambda mi, ki: (ki, mi)),
+            pl.BlockSpec((k_pad, n_out), lambda mi, ki: (0, 0)),
         ],
-        out_specs=pl.BlockSpec((1, block_m), lambda n, mi, ki: (n, mi)),
+        out_specs=pl.BlockSpec((n_out, plan.block_m), lambda mi, ki: (0, mi)),
         out_shape=jax.ShapeDtypeStruct((n_out, m_total), x.dtype),
-        scratch_shapes=[pltpu.VMEM((k_pad, block_m), jnp.float32)],
+        scratch_shapes=[pltpu.VMEM((k_pad, plan.block_m), jnp.float32)],
         interpret=interpret,
     )(xp, ap)
     return out[:, :m]
@@ -268,7 +372,7 @@ def mm_aggregate_2d(
     *,
     num_iters: int = 10,
     c: float = mestimators.TUKEY_C95,
-    block_m: int = DEFAULT_BLOCK_M,
+    block_m: Optional[int] = None,
     block_k: Optional[int] = None,
     interpret: Optional[bool] = None,
 ) -> jnp.ndarray:
@@ -276,7 +380,8 @@ def mm_aggregate_2d(
 
     ``a`` is an optional (K,) vector of combination weights; it is
     normalized internally (invalid weights fall back to uniform, as in
-    ``repro.core.location.normalize_weights``).
+    ``repro.core.location.normalize_weights``).  Block sizes default to
+    the kernels.tuning cache/heuristic.
     """
     if x.ndim != 2:
         raise ValueError(f"mm_aggregate_2d wants (K, M), got {x.shape}")
@@ -298,7 +403,7 @@ def mm_aggregate_batched_2d(
     *,
     num_iters: int = 10,
     c: float = mestimators.TUKEY_C95,
-    block_m: int = DEFAULT_BLOCK_M,
+    block_m: Optional[int] = None,
     block_k: Optional[int] = None,
     interpret: Optional[bool] = None,
 ) -> jnp.ndarray:
@@ -306,9 +411,11 @@ def mm_aggregate_batched_2d(
     columns -> (N, M) estimates, one kernel launch.
 
     Column n of ``a`` is one neighborhood's combination weights (a_{.n}
-    of Eq. 15), normalized internally per column; the x tile is
-    re-streamed per output, which is cheap for the diffusion-sized
-    K, N <= 64 this serves.
+    of Eq. 15), normalized internally per column.  The x tile is
+    streamed from HBM exactly ONCE regardless of N -- all N estimates
+    are computed in the kernel body from the single VMEM residency (see
+    the module docstring); this is the diffusion hot path (K, N = graph
+    size, 16-64 here).
     """
     if x.ndim != 2 or a.ndim != 2 or a.shape[0] != x.shape[0]:
         raise ValueError(

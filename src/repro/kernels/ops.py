@@ -7,12 +7,32 @@ for contexts that cannot host a pallas_call) behind a uniform API:
   aggregate_batched(x, A)       -- (K, M) x (K, N) weight columns -> (N, M)
   aggregate_tree(tree, a=None)  -- whole gradient pytree, ONE kernel launch
 
-The tree path flattens all leaves into a single (K, M_total) buffer so
-small leaves (biases, norms) don't each pay a kernel dispatch; the
-layout (treedef, per-leaf offsets/shapes) is computed once per tree
+Block sizes: unless the caller pins ``block_m``/``block_k``, every
+launch consults ``kernels.tuning`` -- the cached autotuner winner for
+the (K, M, N, dtype) workload when one exists, else a VMEM-budget
+heuristic.  The lookup is shape-only, so it is safe at trace time;
+running ``tuning.autotune`` (e.g. from a warmup script or the agg
+benchmark) makes every subsequent engine launch for that shape use the
+measured winner.
+
+Tree path (copy-free): all leaves are staged into a single (K, M_total)
+f32 buffer by one preallocated scatter (``jnp.zeros`` +
+``dynamic_update_slice`` per leaf), the kernel runs once, and the
+result is sliced back -- ALL inside one jitted program per tree layout,
+so XLA fuses stage -> kernel -> split with no eager concatenate and no
+per-leaf host dispatch (the previous path materialized an eager
+``jnp.concatenate`` and then sliced eagerly per leaf: three extra
+full-tree copies).  Donation semantics: with ``donate_leaves=True`` the
+engine donates the input leaf buffers to the staging computation, so
+XLA may write the staging buffer into the gradients' memory
+(aggregation is typically the last reader of a gradient tree).  The
+caller must not reuse the passed leaves afterwards -- jax will raise on
+a donated-buffer re-read.  Donation is a no-op (and safe) when the call
+is inlined into an outer jit.
+
+The layout (treedef, per-leaf offsets/shapes) is computed once per tree
 structure and cached on the engine, so repeated training-step calls
-reuse the compiled flatten->kernel->split program instead of rebuilding
-the concatenation plan.
+reuse the compiled stage->kernel->split program.
 
 Module-level ``mm_aggregate`` / ``mm_aggregate_batched`` /
 ``mm_aggregate_tree`` delegate to a shared default engine and are what
@@ -30,6 +50,7 @@ import jax.numpy as jnp
 
 from repro.core import location, mestimators
 from repro.kernels import mm_aggregate as _k
+from repro.kernels import tuning
 
 
 def _tukey(c: float):
@@ -78,6 +99,36 @@ def _agg_batched_2d(flat, a, *, num_iters, c, block_m, block_k, interpret,
                                       interpret=interpret)
 
 
+def _agg_tree_impl(leaves, a, *, sizes, offsets, shapes, dtypes, opts):
+    """Stage -> single kernel launch -> split, one fused program.
+
+    ``leaves`` is the flat tuple of (K, ...) arrays; the static layout
+    tuples come from the engine's _TreeLayout cache.  The staging buffer
+    is preallocated once and each leaf is scattered into its column
+    range; under jit the updates lower to in-place writes (and with
+    donation the buffer can reuse the leaves' memory).
+    """
+    k = shapes[0][0]
+    m_total = sum(sizes)
+    buf = jnp.zeros((k, m_total), jnp.float32)
+    for leaf, off, n in zip(leaves, offsets, sizes):
+        buf = jax.lax.dynamic_update_slice(
+            buf, leaf.astype(jnp.float32).reshape(k, n), (0, off))
+    agg = _agg_nd(buf, a, **dict(opts))
+    return tuple(
+        jax.lax.dynamic_slice(agg, (off,), (n,)).reshape(shape[1:]).astype(dt)
+        for off, n, shape, dt in zip(offsets, sizes, shapes, dtypes))
+
+
+_STATIC_TREE_ARGS = ("sizes", "offsets", "shapes", "dtypes", "opts")
+_agg_tree_flat = jax.jit(_agg_tree_impl, static_argnames=_STATIC_TREE_ARGS)
+# donating variant: the leaf buffers may be reused for the staging
+# scatter (callers must treat the passed tree as consumed)
+_agg_tree_flat_donated = jax.jit(_agg_tree_impl,
+                                 static_argnames=_STATIC_TREE_ARGS,
+                                 donate_argnums=(0,))
+
+
 class _TreeLayout:
     """Cached flatten plan for one pytree structure."""
 
@@ -106,14 +157,24 @@ class AggregationEngine:
     ``backend="jnp"`` runs the identical algorithm via core.location for
     contexts that cannot host a pallas_call (it is the kernel's oracle,
     so both backends agree to float tolerance).
+
+    ``block_m``/``block_k`` of None (the default) resolve per launch
+    through ``kernels.tuning`` (autotuned winner if cached, heuristic
+    otherwise); ``autotune=True`` additionally runs the timing sweep on
+    first sight of a workload shape (only outside jit tracing -- traced
+    calls fall back to the cache/heuristic).  ``donate_leaves=True``
+    lets the tree path donate the input gradient leaves to the staging
+    scatter (see module docstring).
     """
 
     def __init__(self, *, num_iters: int = 10,
                  c: float = mestimators.TUKEY_C95,
-                 block_m: int = _k.DEFAULT_BLOCK_M,
+                 block_m: Optional[int] = None,
                  block_k: Optional[int] = None,
                  interpret: Optional[bool] = None,
-                 backend: str = "pallas"):
+                 backend: str = "pallas",
+                 autotune: bool = False,
+                 donate_leaves: bool = False):
         if backend not in ("pallas", "jnp"):
             raise ValueError(f"unknown backend {backend!r}")
         self.num_iters = num_iters
@@ -122,11 +183,31 @@ class AggregationEngine:
         self.block_k = block_k
         self.interpret = interpret
         self.backend = backend
+        self.autotune = autotune
+        self.donate_leaves = donate_leaves
         self._layouts: dict = {}
 
-    def _opts(self):
-        return dict(num_iters=self.num_iters, c=self.c, block_m=self.block_m,
-                    block_k=self.block_k, interpret=self.interpret,
+    def _blocks_for(self, x, k: int, m: int, n: int = 1):
+        """Resolve block sizes for one launch: explicit engine settings
+        win; otherwise consult the tuning cache (optionally running the
+        sweep when ``autotune`` and ``x`` is concrete)."""
+        if self.block_m is not None or self.backend != "pallas":
+            bm = self.block_m if self.block_m is not None \
+                else _k.DEFAULT_BLOCK_M
+            return bm, self.block_k
+        dtype = x.dtype
+        if self.autotune and not isinstance(x, jax.core.Tracer):
+            return tuning.autotune(k, m, n, dtype,
+                                   num_iters=self.num_iters,
+                                   interpret=self.interpret)
+        if self.block_k is not None:
+            return tuning.get_blocks(k, m, n, dtype)[0], self.block_k
+        return tuning.get_blocks(k, m, n, dtype)
+
+    def _opts(self, x, k: int, m: int, n: int = 1):
+        bm, bk = self._blocks_for(x, k, m, n)
+        return dict(num_iters=self.num_iters, c=self.c, block_m=bm,
+                    block_k=bk, interpret=self.interpret,
                     backend=self.backend)
 
     # -- arrays ------------------------------------------------------------
@@ -134,13 +215,18 @@ class AggregationEngine:
     def aggregate(self, x: jnp.ndarray,
                   a: Optional[jnp.ndarray] = None) -> jnp.ndarray:
         """MM location estimate along axis 0: (K, ...) -> (...)."""
-        return _agg_nd(x, a, **self._opts())
+        k = x.shape[0]
+        m = int(x.size) // max(k, 1)
+        return _agg_nd(x, a, **self._opts(x, k, m))
 
     def aggregate_batched(self, x: jnp.ndarray, a: jnp.ndarray) -> jnp.ndarray:
         """(K, ...) values x (K, N) weight columns -> (N, ...): every
-        neighborhood of a combination matrix in one kernel launch."""
+        neighborhood of a combination matrix in one kernel launch, the
+        input tile streamed from HBM exactly once regardless of N."""
         k = x.shape[0]
-        out = _agg_batched_2d(x.reshape(k, -1), a, **self._opts())
+        m = int(x.size) // max(k, 1)
+        out = _agg_batched_2d(x.reshape(k, -1), a,
+                              **self._opts(x, k, m, a.shape[1]))
         return out.reshape((a.shape[1],) + x.shape[1:])
 
     # -- pytrees -----------------------------------------------------------
@@ -152,23 +238,23 @@ class AggregationEngine:
     def aggregate_tree(self, tree, a: Optional[jnp.ndarray] = None):
         """Aggregate a pytree of stacked (K, ...) leaves in ONE launch.
 
-        All leaves are flattened into the cached (K, M_total) layout,
-        aggregated by a single kernel launch, and split back.
+        All leaves are scattered into the cached (K, M_total) staging
+        layout, aggregated by a single kernel launch, and sliced back --
+        one fused jit program per tree structure (see module docstring
+        for the copy-free staging and donation semantics).
         """
         leaves, treedef = jax.tree.flatten(tree)
         if not leaves:
             return tree
         layout = self._layout_for(leaves, treedef)
-        k = layout.k
-        flat = jnp.concatenate(
-            [l.astype(jnp.float32).reshape(k, -1) for l in leaves], axis=1)
-        agg = _agg_nd(flat, a, **self._opts())
-        outs = [
-            agg[off:off + n].reshape(shape[1:]).astype(dtype)
-            for off, n, shape, dtype in zip(
-                layout.offsets, layout.sizes, layout.shapes, layout.dtypes)
-        ]
-        return jax.tree.unflatten(layout.treedef, outs)
+        m_total = sum(layout.sizes)
+        opts = tuple(sorted(
+            self._opts(leaves[0], layout.k, m_total).items()))
+        fn = _agg_tree_flat_donated if self.donate_leaves else _agg_tree_flat
+        outs = fn(tuple(leaves), a, sizes=layout.sizes,
+                  offsets=layout.offsets, shapes=layout.shapes,
+                  dtypes=layout.dtypes, opts=opts)
+        return jax.tree.unflatten(layout.treedef, list(outs))
 
 
 @functools.lru_cache(maxsize=None)
@@ -188,7 +274,7 @@ def mm_aggregate(
     *,
     num_iters: int = 10,
     c: float = mestimators.TUKEY_C95,
-    block_m: int = _k.DEFAULT_BLOCK_M,
+    block_m: Optional[int] = None,
     block_k: Optional[int] = None,
     interpret: Optional[bool] = None,
     backend: str = "pallas",
@@ -204,7 +290,7 @@ def mm_aggregate_batched(
     *,
     num_iters: int = 10,
     c: float = mestimators.TUKEY_C95,
-    block_m: int = _k.DEFAULT_BLOCK_M,
+    block_m: Optional[int] = None,
     block_k: Optional[int] = None,
     interpret: Optional[bool] = None,
     backend: str = "pallas",
@@ -220,7 +306,7 @@ def mm_aggregate_tree(
     *,
     num_iters: int = 10,
     c: float = mestimators.TUKEY_C95,
-    block_m: int = _k.DEFAULT_BLOCK_M,
+    block_m: Optional[int] = None,
     block_k: Optional[int] = None,
     interpret: Optional[bool] = None,
     backend: str = "pallas",

@@ -36,7 +36,29 @@ def mm_aggregate_ref(x: jnp.ndarray, a: Optional[jnp.ndarray] = None,
 def mm_aggregate_batched_ref(x: jnp.ndarray, a: jnp.ndarray,
                              *, num_iters: int = 10,
                              c: float = mestimators.TUKEY_C95) -> jnp.ndarray:
-    """Batched oracle: (K, M) values x (K, N) weight columns -> (N, M)."""
+    """Batched oracle: (K, M) values x (K, N) weight columns -> (N, M).
+
+    The N>1 parity suites sweep this against the one-residency batched
+    kernel (kernels.mm_aggregate), including non-divisible K and M.
+    """
     return jax.vmap(
         lambda col: mm_aggregate_ref(x, col, num_iters=num_iters, c=c),
         in_axes=1)(a)
+
+
+def paired_sort_ref(x: jnp.ndarray, w: jnp.ndarray):
+    """Stable-argsort oracle for the kernel's paired sort network.
+
+    Sorts ``x`` (K, M) along axis 0 and permutes ``w`` -- (K, M) or
+    (K, N, M) carry planes -- with the same per-column order.  On
+    distinct values the bitonic paired sort must match this exactly; on
+    ties only derived order statistics (median ranks, cumulative-weight
+    crossings) are required to agree, since tied values are
+    interchangeable.
+    """
+    order = jnp.argsort(x, axis=0, stable=True)
+    xs = jnp.take_along_axis(x, order, axis=0)
+    if w.ndim == x.ndim:
+        return xs, jnp.take_along_axis(w, order, axis=0)
+    ws = jnp.take_along_axis(w, order[:, None, :], axis=0)
+    return xs, ws

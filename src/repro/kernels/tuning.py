@@ -1,0 +1,176 @@
+"""Block-size autotuner for the batched MM-aggregation kernel.
+
+The kernel's two performance knobs are ``block_m`` (the lane tile, how
+many coordinates share one VMEM residency) and ``block_k`` (the K
+stream block; ``None`` streams the whole padded K axis as one block).
+The right choice depends on the workload tuple
+
+    (K, M, N, dtype)
+
+because the kernel-body batch over N weight columns multiplies the
+in-register working set: the weighted-median carry planes and the MAD
+deviation planes are (K_pad2, N, block_m) f32, so large K*N wants a
+narrower block_m while small problems want the widest tile the M axis
+supports (less grid overhead, better DMA efficiency).
+
+Two entry points:
+
+  get_blocks(k, m, n, dtype)  -- cheap, shape-only: returns the cached
+      autotuner winner for the key if one exists, else a VMEM-budget
+      heuristic.  This is what ``mm_aggregate.launch_plan`` (and hence
+      the AggregationEngine) consults by default; it never times
+      anything, so it is safe at trace time.
+  autotune(k, m, n, dtype)    -- sweeps candidate (block_m, block_k)
+      pairs on synthetic data, times the real launcher, caches the
+      winner in the in-process cache, and returns it.  Run it once per
+      workload shape (e.g. from a warmup script or the benchmarks);
+      every later get_blocks/launch for that shape uses the winner.
+
+The cache is in-process only (keyed by TuneKey); persisting across
+processes is the caller's job (e.g. BENCH_agg.json records the sweep).
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, NamedTuple, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.mm_aggregate import next_pow2 as _next_pow2
+
+LANE = 128
+# conservative per-core VMEM budget for the kernel-body working set
+# (the full VMEM is ~16 MB; leave room for double buffering + output)
+_VMEM_BUDGET_BYTES = 4 * 2 ** 20
+_MAX_BLOCK_M = 1024
+
+BlockChoice = Tuple[int, Optional[int]]   # (block_m, block_k)
+
+
+class TuneKey(NamedTuple):
+    k: int
+    m: int
+    n: int
+    dtype: str
+
+
+_CACHE: Dict[TuneKey, BlockChoice] = {}
+
+
+def _key(k: int, m: int, n: int, dtype) -> TuneKey:
+    return TuneKey(int(k), int(m), int(n), jnp.dtype(dtype).name)
+
+
+def heuristic_blocks(k: int, m: int, n: int = 1,
+                     dtype=jnp.float32) -> BlockChoice:
+    """VMEM-budget fallback used when no autotune measurement is cached.
+
+    Working set per lane column (f32): the streamed x tile (~2 copies
+    through the sort), plus ~3 (K_pad2, N) planes for the carried
+    weights, the deviations and their sort temporaries.  Pick the
+    widest lane tile that fits the budget, clamped to [128, 1024] and
+    to the (lane-rounded) problem width so tiny M never over-pads.
+    """
+    p = _next_pow2(max(int(k), 2))
+    n = max(int(n), 1)
+    bytes_per_lane = p * (3 * n + 3) * 4
+    bm = _VMEM_BUDGET_BYTES // max(bytes_per_lane, 1)
+    bm = (bm // LANE) * LANE
+    bm = max(LANE, min(_MAX_BLOCK_M, bm))
+    m_lanes = max(LANE, ((int(m) + LANE - 1) // LANE) * LANE)
+    bm = min(bm, m_lanes)
+    # stream the whole (small) K axis as one block: K <= 64 in every
+    # supported mesh, so a K-split only adds grid steps
+    return bm, None
+
+
+def get_blocks(k: int, m: int, n: int = 1, dtype=jnp.float32,
+               backend: str = "pallas") -> BlockChoice:
+    """Resolve block sizes for a workload shape: cached autotuner winner
+    if one exists, else the heuristic.  Shape-only -- safe under jit
+    tracing (never times, never touches array values)."""
+    if backend != "pallas":
+        return heuristic_blocks(k, m, n, dtype)
+    return _CACHE.get(_key(k, m, n, dtype)) or heuristic_blocks(k, m, n, dtype)
+
+
+def set_blocks(k: int, m: int, n: int, dtype, choice: BlockChoice) -> None:
+    """Pin a block choice (tests / precomputed tuning tables)."""
+    _CACHE[_key(k, m, n, dtype)] = (int(choice[0]),
+                                    None if choice[1] is None
+                                    else int(choice[1]))
+
+
+def cache_size() -> int:
+    return len(_CACHE)
+
+
+def clear_cache() -> None:
+    _CACHE.clear()
+
+
+def _time_call_us(fn, *args, reps: int = 3) -> float:
+    jax.block_until_ready(fn(*args))          # compile + warm
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def candidate_blocks(k: int, m: int, n: int = 1,
+                     dtype=jnp.float32) -> Sequence[BlockChoice]:
+    """Default sweep: lane tiles around the heuristic, full-K streaming
+    plus one K-split when the padded K axis is large enough to split."""
+    bms = sorted({LANE, 256, 512, heuristic_blocks(k, m, n, dtype)[0]})
+    m_lanes = max(LANE, ((int(m) + LANE - 1) // LANE) * LANE)
+    bms = [bm for bm in bms if bm <= m_lanes] or [LANE]
+    bks: list = [None]
+    k_even = int(k) + (int(k) % 2)
+    if k_even >= 16:
+        bks.append(k_even // 2 if k_even % 4 == 0 else None)
+    out = []
+    for bm in bms:
+        for bk in bks:
+            if (bm, bk) not in out:
+                out.append((bm, bk))
+    return out
+
+
+def autotune(k: int, m: int, n: int = 1, dtype=jnp.float32, *,
+             candidates: Optional[Sequence[BlockChoice]] = None,
+             num_iters: int = 10,
+             reps: int = 3,
+             interpret: Optional[bool] = None,
+             force: bool = False) -> BlockChoice:
+    """Sweep (block_m, block_k) candidates on synthetic data, cache and
+    return the fastest.  Idempotent per (K, M, N, dtype) unless
+    ``force``; failures of individual candidates are skipped (e.g. a
+    tile too large for the backend)."""
+    from repro.kernels import mm_aggregate as _mk  # full module, lazily
+
+    key = _key(k, m, n, dtype)
+    if not force and key in _CACHE:
+        return _CACHE[key]
+    kx, ka = jax.random.split(jax.random.key(0))
+    x = jax.random.normal(kx, (k, m)).astype(dtype)
+    a = jax.random.uniform(ka, (k, n), minval=0.1, maxval=1.0,
+                           dtype=jnp.float32)
+    best: Optional[BlockChoice] = None
+    best_us = float("inf")
+    for bm, bk in (candidates or candidate_blocks(k, m, n, dtype)):
+        def run(xv, av, _bm=bm, _bk=bk):
+            return _mk.mm_aggregate_batched_2d(
+                xv, av, num_iters=num_iters, block_m=_bm, block_k=_bk,
+                interpret=interpret)
+        try:
+            us = _time_call_us(jax.jit(run), x, a, reps=reps)
+        except Exception:
+            continue
+        if us < best_us:
+            best, best_us = (bm, bk), us
+    if best is None:    # every candidate failed: fall back, don't cache
+        return heuristic_blocks(k, m, n, dtype)
+    _CACHE[key] = best
+    return best

@@ -225,7 +225,10 @@ def _mm_axis0(flat, num_iters: int, use_kernel: bool = False):
     """All MM aggregation in the train steps goes through the engine
     (kernels.ops); ``use_kernel`` (ParallelConfig.use_kernel) selects
     the fused Pallas kernel, else the structure-preserving jnp backend
-    (identical estimator)."""
+    (identical estimator).  Kernel tile sizes resolve per (K, M, dtype)
+    through kernels.tuning -- pre-running ``tuning.autotune`` for the
+    step's gradient shapes makes every launch here use the measured
+    winner instead of the VMEM heuristic."""
     from repro.kernels import ops  # deferred: keep launch import-light
     return ops.mm_aggregate(flat, num_iters=num_iters,
                             backend="pallas" if use_kernel else "jnp")
