@@ -144,6 +144,30 @@ def main(smoke: bool = False) -> tuple[list[tuple], list[dict]]:
                          launches))
         audits.append(traffic_audit(k, m))
 
+    # scenario-runner path: one declarative spec -> a full scan'd run
+    # per paradigm.  These rows are END-TO-END wall clock including XLA
+    # compile (a different quantity from the steady-state per-call
+    # timings above) -- named *_wall_e2e and reported with no modeled
+    # bytes / launch count so trajectory tooling never mixes the two;
+    # BENCH_scenarios.json is the canonical per-spec wall-clock record.
+    from repro import scenarios
+    sc = dict(num_agents=8, dim=8, num_steps=20, num_malicious=2,
+              attack="additive") if smoke else \
+        dict(num_agents=16, dim=10, num_steps=200, num_malicious=3,
+             attack="additive")
+    sc_backends = [("diffusion", "pallas"), ("federated", "jnp")] if smoke \
+        else [("diffusion", "pallas"), ("diffusion", "jnp"),
+              ("federated", "jnp"), ("sharded", "jnp")]
+    for paradigm, backend in sc_backends:
+        sp = scenarios.ScenarioSpec(paradigm=paradigm, backend=backend,
+                                    aggregator="mm_tukey", **sc)
+        res = scenarios.run(sp)
+        coords = sc["num_steps"] * sc["num_agents"] * sc["dim"]
+        us = res.wall_clock_s * 1e6
+        rows.append((f"scenario_wall_e2e/{paradigm}/mm_tukey-{backend}"
+                     f"/K{sc['num_agents']}_M{sc['dim']}_T{sc['num_steps']}",
+                     us, coords / us, None, 0))
+
     # weighted-pytree engine path: the whole gradient tree in ONE launch
     for k in (8,) if smoke else (8, 32):
         tree = _grad_tree(k, scale=4 if smoke else 1)

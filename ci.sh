@@ -12,3 +12,7 @@ cd "$(dirname "$0")"
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 python -m pytest -x -q "$@"
 python benchmarks/agg_bench.py --smoke --json BENCH_agg.json
+# scenario smoke sweep: 3 tiny specs covering all three paradigms on the
+# pallas backend (each result carries the kernel launch audit); exits
+# non-zero on any non-finite metric and emits per-spec wall-clock rows.
+python examples/scenario_sweep.py --smoke --json BENCH_scenarios.json

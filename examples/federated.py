@@ -1,45 +1,33 @@
 """Federated learning (Example 1 of the paper) with robust server
 aggregation: FedAvg whose server-side average is replaced by the MM
-aggregator, under client sampling and local epochs.
+aggregator, under client sampling and local epochs -- each setting one
+declarative ScenarioSpec run by the shared scenario harness (the round
+loop and client-gradient stream live in repro.scenarios / repro.data,
+not here).
 
   PYTHONPATH=src python examples/federated.py
 """
 
-import jax
-import jax.numpy as jnp
-import numpy as np
+from repro import scenarios
 
-from repro.core import attacks, federated
-from repro.data import synthetic
-
-PROB = synthetic.LinearModelProblem(dim=10, noise_var=0.01)
-
-
-def client_grad(w, idx, key):
-    ku, kv = jax.random.split(jax.random.fold_in(key, idx))
-    u = jax.random.normal(ku, (10,))
-    d = u @ PROB.w_star + 0.1 * jax.random.normal(kv, ())
-    return -u * (d - u @ w)
+BASE = dict(paradigm="federated", num_agents=32, participation=0.5,
+            local_steps=5, dim=10, noise_var=0.01, step_size=0.05,
+            num_steps=300, attack="additive",
+            attack_kwargs=(("delta", 1000.0),))
 
 
 def main():
-    byz = attacks.ByzantineConfig(
-        num_malicious=6, attack="additive", attack_kwargs=(("delta", 1000.0),))
     settings = {
-        "FedAvg (clean)": ("mean", attacks.ByzantineConfig()),
-        "FedAvg (6/32 malicious)": ("mean", byz),
-        "Robust-FedAvg MM (6/32 malicious)": ("mm_tukey", byz),
-        "Robust-FedAvg median (6/32 malicious)": ("median", byz),
+        "FedAvg (clean)": ("mean", 0),
+        "FedAvg (6/32 malicious)": ("mean", 6),
+        "Robust-FedAvg MM (6/32 malicious)": ("mm_tukey", 6),
+        "Robust-FedAvg median (6/32 malicious)": ("median", 6),
     }
     print(f"{'server aggregation':38s} {'MSD@50':>12s} {'MSD@300':>12s}")
-    for name, (agg, b) in settings.items():
-        cfg = federated.FederatedConfig(
-            num_clients=32, clients_per_round=16, local_steps=5,
-            step_size=0.05, aggregator=agg, byzantine=b)
-        _, hist = federated.run_federated(
-            grad_fn=client_grad, config=cfg, w_star=PROB.w_star,
-            num_rounds=300, key=jax.random.key(0))
-        h = np.asarray(hist)
+    for name, (agg, n_mal) in settings.items():
+        sp = scenarios.ScenarioSpec(
+            aggregator=agg, num_malicious=n_mal, **BASE)
+        h = scenarios.run(sp).history["msd"]
         print(f"{name:38s} {h[49]:12.3e} {h[-1]:12.3e}")
     print("\nMM server aggregation survives 19% malicious clients at"
           " FedAvg-like clean accuracy.")

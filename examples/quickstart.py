@@ -1,38 +1,31 @@
 """Quickstart: REF-Diffusion on the paper's linear-regression problem.
 
-Three runs on the same data: classical (mean) diffusion without and
+Three scenarios on the same data, each a one-line declarative spec run
+by the shared scenario harness: classical (mean) diffusion without and
 with one malicious agent, and REF-Diffusion under the same attack.
 
   PYTHONPATH=src python examples/quickstart.py
 """
 
-import jax
-import numpy as np
+from repro import scenarios
 
-from repro.core import attacks, diffusion, graph
-from repro.data import synthetic
+BASE = dict(paradigm="diffusion", num_agents=32, dim=10, noise_var=0.01,
+            step_size=0.05, num_steps=500, attack="additive",
+            attack_kwargs=(("delta", 1000.0),))
 
 
 def main():
-    prob = synthetic.LinearModelProblem(dim=10, noise_var=0.01)
-    comb = graph.uniform_weights(graph.fully_connected(32))
-    attack = attacks.ByzantineConfig(
-        num_malicious=1, attack="additive", attack_kwargs=(("delta", 1000.0),))
-
     runs = {
-        "mean (clean)": diffusion.DiffusionConfig(
-            step_size=0.05, aggregator="mean"),
-        "mean (1 attacker)": diffusion.DiffusionConfig(
-            step_size=0.05, aggregator="mean", byzantine=attack),
-        "REF  (1 attacker)": diffusion.DiffusionConfig(
-            step_size=0.05, aggregator="mm_tukey", byzantine=attack),
+        "mean (clean)": scenarios.ScenarioSpec(
+            aggregator="mean", num_malicious=0, **BASE),
+        "mean (1 attacker)": scenarios.ScenarioSpec(
+            aggregator="mean", num_malicious=1, **BASE),
+        "REF  (1 attacker)": scenarios.ScenarioSpec(
+            aggregator="mm_tukey", num_malicious=1, **BASE),
     }
     print(f"{'strategy':20s} {'MSD@100':>12s} {'MSD@500':>12s} {'steady':>12s}")
-    for name, cfg in runs.items():
-        _, hist = diffusion.run_diffusion(
-            grad_fn=prob.grad_fn(), combination=comb, config=cfg,
-            w_star=prob.w_star, num_iters=500, key=jax.random.key(0))
-        h = np.asarray(hist)
+    for name, sp in runs.items():
+        h = scenarios.run(sp).history["msd"]
         print(f"{name:20s} {h[99]:12.3e} {h[-1]:12.3e} {h[-100:].mean():12.3e}")
     print("\nA single malicious agent destroys mean aggregation;"
           " REF-Diffusion matches the clean mean run.")

@@ -1,0 +1,137 @@
+"""Scenario sweep CLI: one declarative spec per cell of a
+paradigm x attack x aggregator (x topology x seed) grid, every cell run
+by the same ``scenarios.run`` harness.
+
+  PYTHONPATH=src python examples/scenario_sweep.py \
+      --paradigm diffusion federated sharded \
+      --attack additive alie scm --agg mean mm_tukey --seeds 0 1
+
+``--smoke`` shrinks the problem (tiny K/M, few steps) for CI; with no
+explicit matrix arguments it runs the CI preset: three pallas-backend
+specs covering all three paradigms, each carrying the
+``mm_aggregate.launch_plan`` audit.  Exits non-zero if ANY scenario
+produces a non-finite metric.  ``--json PATH`` writes the per-spec
+wall-clock rows as BENCH_scenarios.json.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from repro import scenarios
+
+FULL = dict(num_agents=16, dim=10, num_steps=300, num_malicious=3)
+SMOKE = dict(num_agents=8, dim=8, num_steps=25, num_malicious=2)
+
+DEFAULT_PARADIGMS = ("diffusion", "federated", "sharded")
+DEFAULT_ATTACKS = ("additive", "alie", "scm")
+DEFAULT_AGGS = ("mean", "mm_tukey")
+
+
+def build_specs(ns) -> list:
+    sizes = SMOKE if ns.smoke else FULL
+    if ns.malicious is not None:
+        sizes = {**sizes, "num_malicious": ns.malicious}
+    if ns.steps is not None:
+        sizes = {**sizes, "num_steps": ns.steps}
+
+    def topo_for(paradigm):
+        # --topology drives the diffusion combination matrix; the other
+        # paradigms' communication pattern is fixed by construction
+        return ns.topology if paradigm == "diffusion" else "fully_connected"
+
+    ci_preset = ns.smoke and not (ns.paradigm or ns.attack or ns.agg)
+    if ci_preset:
+        # the 3-spec CI matrix: every paradigm once, pallas backend by
+        # default so each result carries the kernel-launch audit (an
+        # explicit --backend still wins)
+        return [
+            scenarios.ScenarioSpec(
+                paradigm=p, aggregator="mm_tukey",
+                backend=ns.backend or "pallas",
+                attack="additive", topology=topo_for(p), seed=ns.seeds[0],
+                **sizes)
+            for p in DEFAULT_PARADIGMS
+        ]
+
+    specs = []
+    for paradigm in ns.paradigm or DEFAULT_PARADIGMS:
+        for attack in ns.attack or DEFAULT_ATTACKS:
+            for agg in ns.agg or DEFAULT_AGGS:
+                for seed in ns.seeds:
+                    backend = ns.backend or "jnp"
+                    if backend == "pallas" and \
+                            agg not in scenarios.spec.MM_AGGREGATORS:
+                        backend = "jnp"   # pallas only lowers the MM family
+                    specs.append(scenarios.ScenarioSpec(
+                        paradigm=paradigm, attack=attack, aggregator=agg,
+                        backend=backend, topology=topo_for(paradigm),
+                        data=ns.data, dirichlet_alpha=ns.alpha,
+                        seed=seed, **sizes))
+    return specs
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--paradigm", nargs="+", default=None,
+                    choices=list(scenarios.PARADIGMS))
+    ap.add_argument("--attack", nargs="+", default=None)
+    ap.add_argument("--agg", nargs="+", default=None)
+    ap.add_argument("--topology", default="fully_connected")
+    ap.add_argument("--backend", default=None,
+                    choices=list(scenarios.BACKENDS),
+                    help="engine backend (default: jnp; the --smoke CI "
+                         "preset defaults to pallas for the launch audit)")
+    ap.add_argument("--data", default="iid", choices=["iid", "dirichlet"])
+    ap.add_argument("--alpha", type=float, default=1.0,
+                    help="dirichlet concentration for --data dirichlet")
+    ap.add_argument("--seeds", nargs="+", type=int, default=[0])
+    ap.add_argument("--malicious", type=int, default=None)
+    ap.add_argument("--steps", type=int, default=None)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny K/M and few steps; with no matrix args, "
+                         "the 3-spec all-paradigm CI preset (ci.sh)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write BENCH_scenarios.json-style output")
+    ns = ap.parse_args(argv)
+
+    specs = build_specs(ns)
+    rows = []
+    bad = []
+    hdr = (f"{'scenario':68s} {'steady MSD':>12s} {'final MSD':>12s} "
+           f"{'wall s':>8s} {'audit':>5s}")
+    print(hdr)
+    print("-" * len(hdr))
+    for sp in specs:
+        res = scenarios.run(sp)
+        row = res.to_row()
+        rows.append(row)
+        if not res.finite():
+            bad.append(sp.label())
+        print(f"{sp.label():68s} {res.summary['steady_msd']:12.3e} "
+              f"{res.final_msd:12.3e} {row['wall_clock_s']:8.2f} "
+              f"{'yes' if row['launch_audit'] else 'no':>5s}")
+
+    if ns.json:
+        payload = {
+            "bench": "scenarios",
+            "mode": "smoke" if ns.smoke else "full",
+            "rows": rows,
+        }
+        with open(ns.json, "w") as f:
+            json.dump(payload, f, indent=2)
+            f.write("\n")
+        print(f"wrote {ns.json}")
+
+    if bad:
+        print(f"NON-FINITE metrics in {len(bad)} scenario(s): {bad}",
+              file=sys.stderr)
+        return 1
+    print(f"\n{len(rows)} scenarios, all metrics finite.")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -16,6 +16,18 @@ Registry:
   scale      -- send gamma * phi (model poisoning by scaling)
   alie       -- "A Little Is Enough": mean + z * std of honest updates,
                 the strongest inlier-looking collusion attack
+  scm        -- sensitivity-curve maximization [Schroth et al. 2024]:
+                colluders sit at the admission boundary of the robust
+                aggregator (median + zeta * c * MADN), the accepted
+                perturbation with maximal influence on M-estimators
+
+``ByzantineConfig`` additionally supports *time-varying* malicious
+masks via ``schedule``: ``static`` (default, the last ``num_malicious``
+agents always attack), ``intermittent`` (the set toggles on/off every
+``period`` steps -- an adaptive attacker evading time-averaged
+detection) and ``rotating`` (the malicious identity slides around the
+agent ring every ``period`` steps).  All schedules are jit-safe
+functions of the traced step index.
 """
 
 from __future__ import annotations
@@ -26,6 +38,8 @@ from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
+
+from repro.core import location, mestimators
 
 Attack = Callable[..., jnp.ndarray]
 
@@ -78,6 +92,30 @@ def alie(honest, mask, key=None, step=0, *, z: Optional[float] = None):
     return _apply_mask(honest, jnp.broadcast_to(mu + z * std, honest.shape), mask)
 
 
+def scm(honest, mask, key=None, step=0, *, zeta: float = 0.9,
+        c: float = mestimators.TUKEY_C95):
+    """Sensitivity-curve maximization [Schroth et al. 2024].
+
+    The sensitivity curve of a redescending M-estimator (Tukey) is
+    maximized by an outlier placed just inside the rejection region:
+    beyond ``c * scale`` the IRLS weight is zero (no influence), so the
+    worst *accepted* perturbation sits at the boundary.  Colluders
+    estimate the benign per-coordinate median and normalized MAD and
+    send ``median + zeta * c * MADN`` (``zeta`` < 1 keeps them inside
+    the acceptance region) -- maximal bias per malicious agent while
+    looking like an extreme-but-valid inlier to the defense.
+    """
+    del key, step
+    k = honest.shape[0]
+    flat = honest.reshape(k, -1)
+    b = (~mask).astype(flat.dtype)                       # benign weights
+    med = location.weighted_median(flat, b, axis=0)      # (M,)
+    dev = jnp.abs(flat - med[None])
+    madn = location.weighted_median(dev, b, axis=0) * location.MAD_CONSISTENCY
+    target = (med + zeta * c * madn).reshape(honest.shape[1:])
+    return _apply_mask(honest, jnp.broadcast_to(target, honest.shape), mask)
+
+
 def apply_local(g, is_malicious, kind: str, kwargs: Optional[dict] = None):
     """Per-rank attack application (for manual/shard_map regions):
     ``is_malicious`` is a scalar bool for *this* rank; ``g`` is a pytree
@@ -107,6 +145,7 @@ _REGISTRY: dict[str, Attack] = {
     "zero": zero,
     "scale": scale,
     "alie": alie,
+    "scm": scm,
 }
 
 
@@ -122,21 +161,50 @@ def get_attack(name: str, **kwargs) -> Attack:
     return functools.partial(fn, **kwargs) if kwargs else fn
 
 
+SCHEDULES = ("static", "intermittent", "rotating")
+
+
 @dataclasses.dataclass(frozen=True)
 class ByzantineConfig:
-    """Which agents are malicious and how they behave."""
+    """Which agents are malicious, how they behave, and *when*.
+
+    ``schedule`` makes the malicious set a function of the step index
+    (see module docstring); ``static`` reproduces the fixed last-
+    ``num_malicious`` set and ignores the step entirely.
+    """
 
     num_malicious: int = 0
     attack: str = "additive"
     attack_kwargs: tuple = ()  # tuple of (key, value) pairs for hashability
+    schedule: str = "static"
+    schedule_kwargs: tuple = ()  # e.g. (("period", 4),)
 
-    def malicious_mask(self, k: int) -> jnp.ndarray:
-        """Deterministic mask: the *last* num_malicious agents are malicious."""
+    def malicious_mask(self, k: int, step=None) -> jnp.ndarray:
+        """(K,) bool mask at ``step`` (traced int ok).  ``step=None`` (or
+        the static schedule) gives the base set: the *last*
+        num_malicious agents."""
         idx = jnp.arange(k)
-        return idx >= (k - self.num_malicious)
+        base = idx >= (k - self.num_malicious)
+        if self.schedule == "static" or step is None:
+            return base
+        period = int(dict(self.schedule_kwargs).get("period", 2))
+        t = jnp.asarray(step) // period
+        if self.schedule == "intermittent":
+            return base & ((t % 2) == 0)
+        if self.schedule == "rotating":
+            return jnp.roll(base, t % k)
+        raise ValueError(
+            f"unknown schedule {self.schedule!r}; known: {SCHEDULES}")
 
-    def apply(self, honest: jnp.ndarray, key, step: int = 0) -> jnp.ndarray:
+    def apply(self, honest: jnp.ndarray, key, step=0) -> jnp.ndarray:
         if self.num_malicious == 0:
             return honest
         fn = get_attack(self.attack, **dict(self.attack_kwargs))
-        return fn(honest, self.malicious_mask(honest.shape[0]), key, step)
+        return fn(honest, self.malicious_mask(honest.shape[0], step), key, step)
+
+    def apply_tree(self, tree, key, step=0):
+        """Leaf-wise corruption of a pytree of stacked (K, ...) leaves
+        (per-agent gradient stacks in the train steps)."""
+        if self.num_malicious == 0:
+            return tree
+        return jax.tree.map(lambda g: self.apply(g, key, step), tree)

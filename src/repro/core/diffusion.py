@@ -63,6 +63,7 @@ def diffusion_step(
     grad_fn: GradFn,
     combination: jnp.ndarray,      # (K, K) left-stochastic, columns sum to 1
     config: DiffusionConfig,
+    step=0,                        # traced step index (attack schedules)
 ) -> jnp.ndarray:
     k_agents = w.shape[0]
     g_key, a_key = jax.random.split(key)
@@ -71,7 +72,7 @@ def diffusion_step(
     phi = w - config.step_size * grad_fn(w, g_key)
 
     # Malicious agents corrupt what they *send* (one value to all peers).
-    phi_sent = config.byzantine.apply(phi, a_key)
+    phi_sent = config.byzantine.apply(phi, a_key, step)
 
     # Steps 2+3: per-agent robust combine over its neighborhood column.
     agg = config.aggregator_fn()
@@ -118,22 +119,12 @@ def run_diffusion(
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Run the strategy; returns (final W, MSD history (num_iters//log_every,)).
 
-    The whole loop is one lax.scan -> a single XLA program.
+    Thin wrapper over the scenario runner's diffusion loop (the scan
+    lives in repro.scenarios.runner; this keeps the historical public
+    signature and return shape).
     """
-    check_compatible(config, combination)
-    k_agents = combination.shape[0]
-    m_dim = w_star.shape[0]
-    if w0 is None:
-        w0 = jnp.zeros((k_agents, m_dim), dtype=w_star.dtype)
-    comb = jnp.asarray(combination, dtype=w0.dtype)
-    benign = ~config.byzantine.malicious_mask(k_agents)
-
-    def body(w, it_key):
-        w_next = diffusion_step(
-            w, it_key, grad_fn=grad_fn, combination=comb, config=config
-        )
-        return w_next, msd(w_next, w_star, benign)
-
-    keys = jax.random.split(key, num_iters)
-    w_final, history = jax.lax.scan(body, w0, keys)
-    return w_final, history[::log_every]
+    from repro.scenarios import runner as _runner  # deferred: no cycle
+    w_final, history = _runner.diffusion_loop(
+        grad_fn=grad_fn, combination=combination, config=config,
+        w_star=w_star, num_iters=num_iters, key=key, w0=w0)
+    return w_final, history["msd"][::log_every]

@@ -59,6 +59,7 @@ def local_update(
 def federated_round(
     w: jnp.ndarray, key: jax.Array, *,
     grad_fn: ClientGradFn, config: FederatedConfig,
+    step=0,                        # traced round index (attack schedules)
 ) -> jnp.ndarray:
     sample_key, local_key, attack_key = jax.random.split(key, 3)
 
@@ -76,14 +77,15 @@ def federated_round(
     )(chosen, local_keys)                                            # (N, M)
 
     # 3. corruption: a client is malicious iff its *global* index is in the
-    #    malicious set (the last num_malicious of the K clients).
-    mal_global = config.byzantine.malicious_mask(config.num_clients)  # (K,)
+    #    malicious set (by default the last num_malicious of the K clients;
+    #    schedules make the set step-dependent).
+    mal_global = config.byzantine.malicious_mask(config.num_clients, step)  # (K,)
     mask = mal_global[chosen]                                         # (N,)
     if config.byzantine.num_malicious > 0:
         fn = attacks.get_attack(
             config.byzantine.attack, **dict(config.byzantine.attack_kwargs)
         )
-        phis = fn(phis, mask, attack_key, 0)
+        phis = fn(phis, mask, attack_key, step)
 
     # 4. robust server aggregation (Eq. 4 generalized).  With client
     #    weights the sampled cohort's weights ride into the aggregator
@@ -106,14 +108,14 @@ def run_federated(
     key: jax.Array,
     w0: Optional[jnp.ndarray] = None,
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Returns (final server model, MSD history (num_rounds,))."""
-    if w0 is None:
-        w0 = jnp.zeros_like(w_star)
+    """Returns (final server model, MSD history (num_rounds,)).
 
-    def body(w, round_key):
-        w_next = federated_round(w, round_key, grad_fn=grad_fn, config=config)
-        return w_next, jnp.sum((w_next - w_star) ** 2)
-
-    keys = jax.random.split(key, num_rounds)
-    w_final, history = jax.lax.scan(body, w0, keys)
-    return w_final, history
+    Thin wrapper over the scenario runner's federated loop (the scan
+    lives in repro.scenarios.runner; this keeps the historical public
+    signature and return shape).
+    """
+    from repro.scenarios import runner as _runner  # deferred: no cycle
+    w_final, history = _runner.federated_loop(
+        grad_fn=grad_fn, config=config, w_star=w_star,
+        num_rounds=num_rounds, key=key, w0=w0)
+    return w_final, history["msd"]

@@ -48,6 +48,80 @@ def erdos_renyi(k: int, p: float, seed: int = 0) -> np.ndarray:
     raise RuntimeError(f"could not sample a connected ER({k}, {p}) graph")
 
 
+def star(k: int) -> np.ndarray:
+    """Hub-and-spoke: agent 0 is connected to everyone (the federated
+    fusion-center topology viewed as a graph)."""
+    adj = np.eye(k, dtype=bool)
+    adj[0, :] = adj[:, 0] = True
+    return adj
+
+
+def small_world(k: int, nbrs: int = 2, rewire_p: float = 0.1,
+                seed: int = 0) -> np.ndarray:
+    """Watts-Strogatz small world: a ring lattice (each agent linked to
+    ``nbrs`` hops on each side) with every lattice edge rewired to a
+    uniform random endpoint with probability ``rewire_p``; re-sampled
+    until connected.  ``rewire_p=0`` is exactly ``ring(k, nbrs)``."""
+    if not 0.0 <= rewire_p <= 1.0:
+        raise ValueError(f"rewire_p must be in [0, 1], got {rewire_p}")
+    lattice_hops = min(nbrs, (k - 1) // 2)
+    if lattice_hops < 1:
+        raise ValueError(
+            f"small_world needs k >= 3 for a nonempty ring lattice, got k={k}")
+    rng = np.random.default_rng(seed)
+    for _ in range(1000):
+        adj = np.eye(k, dtype=bool)
+        for h in range(1, lattice_hops + 1):
+            for i in range(k):
+                j = (i + h) % k
+                if rng.random() < rewire_p:
+                    cand = [c for c in range(k) if c != i and not adj[i, c]]
+                    if cand:
+                        j = int(rng.choice(cand))
+                adj[i, j] = adj[j, i] = True
+        if is_connected(adj):
+            return adj
+    raise RuntimeError(f"could not sample a connected small world graph")
+
+
+def _grid_from_k(k: int, rows: int = 0) -> np.ndarray:
+    """Near-square grid on k agents; ``rows`` pins the factorization."""
+    if rows:
+        if k % rows:
+            raise ValueError(f"grid rows={rows} does not divide k={k}")
+    else:
+        rows = int(np.sqrt(k))
+        while rows > 1 and k % rows:
+            rows -= 1
+    return grid(rows, k // rows)
+
+
+# name -> builder(k, **kwargs); the scenario spec's topology field
+# resolves through this registry, so a new topology is one entry here.
+_TOPOLOGIES = {
+    "fully_connected": fully_connected,
+    "ring": ring,
+    "grid": _grid_from_k,
+    "erdos_renyi": lambda k, p=0.3, seed=0: erdos_renyi(k, p, seed),
+    "small_world": small_world,
+    "star": star,
+}
+
+
+def topology_names() -> list:
+    return sorted(_TOPOLOGIES)
+
+
+def get_topology(name: str, k: int, **kwargs) -> np.ndarray:
+    """Build an adjacency matrix by registry name."""
+    try:
+        fn = _TOPOLOGIES[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown topology {name!r}; known: {topology_names()}") from None
+    return fn(k, **kwargs)
+
+
 def is_connected(adj: np.ndarray) -> bool:
     k = adj.shape[0]
     seen = np.zeros(k, dtype=bool)
@@ -78,6 +152,24 @@ def metropolis_weights(adj: np.ndarray) -> np.ndarray:
             if l != kk and adj[l, kk]:
                 a[l, kk] = 1.0 / max(deg[l], deg[kk])
     a[np.diag_indices(k)] = 1.0 - a.sum(axis=0)
+    return a
+
+
+_WEIGHT_RULES = {
+    "uniform": uniform_weights,
+    "metropolis": metropolis_weights,
+}
+
+
+def combination_matrix(adj: np.ndarray, rule: str = "uniform") -> np.ndarray:
+    """Left-stochastic combination matrix from an adjacency by rule name."""
+    try:
+        fn = _WEIGHT_RULES[rule]
+    except KeyError:
+        raise ValueError(f"unknown weight rule {rule!r}; "
+                         f"known: {sorted(_WEIGHT_RULES)}") from None
+    a = fn(adj)
+    validate_combination_matrix(a)
     return a
 
 

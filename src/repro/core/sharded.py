@@ -49,21 +49,34 @@ def _axis_size(axis_name: AxisName) -> int:
 _ENGINE_BACKENDS = {"mm_tukey": "jnp", "ref": "jnp", "mm_pallas": "pallas"}
 
 
-def _get_agg(aggregator, **kwargs) -> Callable:
-    if isinstance(aggregator, str):
-        backend = _ENGINE_BACKENDS.get(aggregator)
-        if backend is not None:
-            # MM aggregation goes through the one engine entry point
-            # (kernels.ops); the jnp backend is the identical estimator
-            # for shard_map regions that cannot host a pallas_call.
-            from repro.kernels import ops  # deferred: avoid import cycle
+def engine_aggregator(aggregator="mm_tukey", *, backend: str = None,
+                      **kwargs) -> Callable:
+    """Resolve an aggregator name to a ``(stacked, a) -> estimate`` fn.
 
-            def agg(x, a, _backend=backend, _kw=kwargs):
+    The single aggregator-resolution path shared by the shard_map
+    collectives here, the scenario runner, and the train steps
+    (launch.steps): MM-family names route through the one engine entry
+    point (kernels.ops) -- ``backend`` overrides the name's default
+    (``mm_tukey`` -> jnp, ``mm_pallas`` -> pallas); the jnp backend is
+    the identical estimator for contexts that cannot host a
+    pallas_call.  Non-MM names come from the core registry unchanged.
+    """
+    if isinstance(aggregator, str):
+        default_backend = _ENGINE_BACKENDS.get(aggregator)
+        if default_backend is not None:
+            from repro.kernels import ops  # deferred: avoid import cycle
+            b = backend or default_backend
+
+            def agg(x, a, _backend=b, _kw=kwargs):
                 return ops.mm_aggregate(x, a, backend=_backend, **_kw)
 
             return agg
         return aggregators.get_aggregator(aggregator, **kwargs)
     return functools.partial(aggregator, **kwargs) if kwargs else aggregator
+
+
+def _get_agg(aggregator, **kwargs) -> Callable:
+    return engine_aggregator(aggregator, **kwargs)
 
 
 def gather_mm(x: jnp.ndarray, axis_name: AxisName, *,

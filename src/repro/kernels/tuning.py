@@ -26,12 +26,20 @@ Two entry points:
       workload shape (e.g. from a warmup script or the benchmarks);
       every later get_blocks/launch for that shape uses the winner.
 
-The cache is in-process only (keyed by TuneKey); persisting across
-processes is the caller's job (e.g. BENCH_agg.json records the sweep).
+The in-process cache (keyed by TuneKey) additionally persists across
+processes when the ``REPRO_TUNING_CACHE`` environment variable names a
+JSON file: cached entries are loaded lazily on the first lookup (a
+corrupt or unreadable file silently falls back to the in-process
+heuristic) and every autotune winner is written back atomically
+(tmp file + os.replace), so concurrent writers can at worst lose an
+update, never corrupt the file.  Entries are keyed by
+(K, M, N, dtype, backend).
 """
 
 from __future__ import annotations
 
+import json
+import os
 import time
 from typing import Dict, NamedTuple, Optional, Sequence, Tuple
 
@@ -58,9 +66,96 @@ class TuneKey(NamedTuple):
 
 _CACHE: Dict[TuneKey, BlockChoice] = {}
 
+ENV_CACHE_PATH = "REPRO_TUNING_CACHE"
+_persistent_loaded = False
+
 
 def _key(k: int, m: int, n: int, dtype) -> TuneKey:
     return TuneKey(int(k), int(m), int(n), jnp.dtype(dtype).name)
+
+
+# ---------------------------------------------------------------------------
+# cross-process persistence
+# ---------------------------------------------------------------------------
+
+def cache_path() -> Optional[str]:
+    """The persistent cache file ($REPRO_TUNING_CACHE), if configured."""
+    return os.environ.get(ENV_CACHE_PATH) or None
+
+
+def load_cache(path: Optional[str] = None, *, force: bool = True) -> int:
+    """Merge the persistent JSON cache into the in-process cache.
+
+    Returns the number of entries merged.  In-process entries win over
+    file entries (a live autotune measurement beats a stale file).  A
+    missing, corrupt, or wrong-schema file is treated as empty -- the
+    heuristic fallback stays available -- never an error.
+    """
+    global _persistent_loaded
+    if path is None:
+        # only an env-path load satisfies (and marks) the lazy merge --
+        # explicit-path loads must not suppress it
+        if not force and _persistent_loaded:
+            return 0
+        _persistent_loaded = True
+        path = cache_path()
+    if not path:
+        return 0
+    try:
+        with open(path) as f:
+            payload = json.load(f)
+        entries = payload["entries"]
+        merged = 0
+        for e in entries:
+            try:
+                if e.get("backend", "pallas") != "pallas":
+                    continue
+                key = TuneKey(int(e["k"]), int(e["m"]), int(e["n"]),
+                              str(e["dtype"]))
+                bk = e["block_k"]
+                choice = (int(e["block_m"]), None if bk is None else int(bk))
+            except (KeyError, TypeError, ValueError, AttributeError):
+                continue    # skip the malformed entry, keep the rest
+            if key not in _CACHE:
+                _CACHE[key] = choice
+                merged += 1
+        return merged
+    except (OSError, ValueError, KeyError, TypeError, AttributeError):
+        return 0    # corrupt / unreadable file: heuristic fallback stays
+
+
+def save_cache(path: Optional[str] = None) -> Optional[str]:
+    """Atomically write the in-process cache (merged over any existing
+    file entries) to the persistent JSON file; returns the path written
+    or None when no path is configured."""
+    path = path or cache_path()
+    if not path:
+        return None
+    # merge existing file entries we don't override (other processes may
+    # have tuned other shapes)
+    load_cache(path, force=True)
+    entries = [
+        {"k": key.k, "m": key.m, "n": key.n, "dtype": key.dtype,
+         "backend": "pallas", "block_m": bm, "block_k": bk}
+        for key, (bm, bk) in sorted(_CACHE.items())
+    ]
+    payload = {"version": 1, "entries": entries}
+    tmp = f"{path}.tmp.{os.getpid()}"
+    try:
+        d = os.path.dirname(path)
+        if d:
+            os.makedirs(d, exist_ok=True)
+        with open(tmp, "w") as f:
+            json.dump(payload, f, indent=2)
+            f.write("\n")
+        os.replace(tmp, path)   # atomic on POSIX
+    except OSError:
+        try:
+            os.unlink(tmp)
+        except OSError:
+            pass
+        return None
+    return path
 
 
 def heuristic_blocks(k: int, m: int, n: int = 1,
@@ -93,6 +188,7 @@ def get_blocks(k: int, m: int, n: int = 1, dtype=jnp.float32,
     tracing (never times, never touches array values)."""
     if backend != "pallas":
         return heuristic_blocks(k, m, n, dtype)
+    load_cache(force=False)   # lazy one-time merge of $REPRO_TUNING_CACHE
     return _CACHE.get(_key(k, m, n, dtype)) or heuristic_blocks(k, m, n, dtype)
 
 
@@ -173,4 +269,5 @@ def autotune(k: int, m: int, n: int = 1, dtype=jnp.float32, *,
     if best is None:    # every candidate failed: fall back, don't cache
         return heuristic_blocks(k, m, n, dtype)
     _CACHE[key] = best
+    save_cache()        # best-effort persist of the measured winner
     return best

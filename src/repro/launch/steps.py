@@ -222,16 +222,18 @@ def to_named(specs, mesh):
 # ===========================================================================
 
 def _mm_axis0(flat, num_iters: int, use_kernel: bool = False):
-    """All MM aggregation in the train steps goes through the engine
-    (kernels.ops); ``use_kernel`` (ParallelConfig.use_kernel) selects
-    the fused Pallas kernel, else the structure-preserving jnp backend
-    (identical estimator).  Kernel tile sizes resolve per (K, M, dtype)
-    through kernels.tuning -- pre-running ``tuning.autotune`` for the
-    step's gradient shapes makes every launch here use the measured
-    winner instead of the VMEM heuristic."""
-    from repro.kernels import ops  # deferred: keep launch import-light
-    return ops.mm_aggregate(flat, num_iters=num_iters,
-                            backend="pallas" if use_kernel else "jnp")
+    """All MM aggregation in the train steps resolves through the one
+    shared path (core.sharded.engine_aggregator -> kernels.ops), the
+    same resolution the scenario runner and the shard_map collectives
+    use; ``use_kernel`` (ParallelConfig.use_kernel) selects the fused
+    Pallas kernel, else the structure-preserving jnp backend (identical
+    estimator).  Kernel tile sizes resolve per (K, M, dtype) through
+    kernels.tuning -- pre-running ``tuning.autotune`` for the step's
+    gradient shapes makes every launch here use the measured winner
+    instead of the VMEM heuristic."""
+    agg = sharded_lib.engine_aggregator(
+        "mm_pallas" if use_kernel else "mm_tukey", num_iters=num_iters)
+    return agg(flat, None)
 
 
 def aggregate_stack(grads, mesh, par: ParallelConfig,
@@ -388,8 +390,7 @@ def make_train_step_gspmd(model_cfg: ModelConfig, par: ParallelConfig,
 
             if byzantine is not None and byzantine.num_malicious > 0:
                 key = jax.random.fold_in(jax.random.key(17), opt_state.step)
-                grads = jax.tree.map(
-                    lambda g: byzantine.apply(g, key), grads)
+                grads = byzantine.apply_tree(grads, key, opt_state.step)
 
             agg = aggregate_stack(grads, mesh, par, pspecs, ax)
             new_params, new_opt = optimizers.update(opt_cfg, params, agg,

@@ -1,0 +1,26 @@
+"""Unified scenario subsystem: one declarative spec drives federated,
+diffusion, and sharded runs under a shared adversary/metrics harness.
+
+  spec      -- frozen ScenarioSpec (paradigm x topology x aggregator x
+               backend x attack/schedule x data split x participation)
+               and the uniform ScenarioResult
+  registry  -- paradigm adapter registry (a new scenario family is one
+               ``@register_paradigm`` entry)
+  runner    -- run(spec): the single lax.scan loop every paradigm
+               shares; also hosts the legacy diffusion/federated loops
+  metrics   -- per-step msd/loss/consensus + attack-success summaries
+"""
+
+from repro.scenarios.metrics import attack_summary, steady  # noqa: F401
+from repro.scenarios.registry import (  # noqa: F401
+    get_paradigm,
+    paradigm_names,
+    register_paradigm,
+)
+from repro.scenarios.runner import run  # noqa: F401
+from repro.scenarios.spec import (  # noqa: F401
+    BACKENDS,
+    PARADIGMS,
+    ScenarioResult,
+    ScenarioSpec,
+)

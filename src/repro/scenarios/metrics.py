@@ -1,0 +1,65 @@
+"""Shared per-step metrics and post-run summaries.
+
+Per-step metrics are jit-safe scalars emitted from inside the scan
+body; summaries are numpy reductions over the finished histories.  All
+paradigms report the same metric names so results compare directly:
+
+  msd        -- mean-square deviation to w_star over benign agents
+                (single-model paradigms: the one model's squared error)
+  loss       -- expected excess streaming MSE = msd + sigma_v^2
+  consensus  -- mean squared distance of benign agents to their own
+                centroid (0 by construction for single-model paradigms)
+"""
+
+from __future__ import annotations
+
+from typing import Dict
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import diffusion as _diffusion
+
+# re-export: the paper's Fig. 1 metric is THE msd for stacked states
+msd_stack = _diffusion.msd
+
+
+def msd_single(w: jnp.ndarray, w_star: jnp.ndarray) -> jnp.ndarray:
+    """Squared deviation of one shared model (federated / sharded)."""
+    return jnp.sum((w - w_star) ** 2)
+
+
+def consensus_distance(w: jnp.ndarray, benign_mask: jnp.ndarray) -> jnp.ndarray:
+    """Mean squared distance of benign agents to the benign centroid."""
+    b = benign_mask.astype(w.dtype)
+    nb = jnp.maximum(jnp.sum(b), 1.0)
+    wbar = jnp.sum(w * b[:, None], axis=0) / nb
+    sq = jnp.sum((w - wbar[None]) ** 2, axis=1)
+    return jnp.sum(sq * b) / nb
+
+
+def steady(h: np.ndarray, frac: float = 0.2) -> float:
+    """Mean of the trailing ``frac`` of a history (steady-state level)."""
+    n = max(1, int(len(h) * frac))
+    return float(np.mean(h[-n:]))
+
+
+def attack_summary(msd_hist: np.ndarray,
+                   breakdown_level: float = 1.0) -> Dict:
+    """Attack-success metrics from an MSD history: the attack succeeded
+    if the run diverged (non-finite) or settled above
+    ``breakdown_level`` (the clean problem settles at O(mu))."""
+    finite = bool(np.isfinite(msd_hist).all())
+    s = steady(msd_hist) if finite else float("inf")
+    return {
+        "steady_msd": s,
+        "peak_msd": float(np.max(msd_hist)) if finite else float("inf"),
+        "broke_down": (not finite) or s > breakdown_level,
+    }
+
+
+def assert_finite(history: Dict[str, np.ndarray], label: str = "") -> None:
+    for name, h in history.items():
+        if not np.isfinite(h).all():
+            raise AssertionError(
+                f"non-finite metric {name!r} in scenario {label or '<run>'}")

@@ -1,0 +1,39 @@
+"""Paradigm adapter registry.
+
+A paradigm adapter lowers a ``ScenarioSpec`` to the two pieces the
+runner's single ``lax.scan`` needs:
+
+    adapter(spec) -> (state0, step_fn)
+    step_fn(state, key, step_index) -> (state, {metric: scalar, ...})
+
+Registering a new paradigm (or a variant of an existing one) is one
+``@register_paradigm("name")`` entry -- the runner, the sweep CLI, the
+metrics and the attack wiring all come for free.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Dict
+
+Adapter = Callable
+
+_PARADIGMS: Dict[str, Adapter] = {}
+
+
+def register_paradigm(name: str) -> Callable[[Adapter], Adapter]:
+    def deco(fn: Adapter) -> Adapter:
+        _PARADIGMS[name] = fn
+        return fn
+    return deco
+
+
+def paradigm_names() -> list:
+    return sorted(_PARADIGMS)
+
+
+def get_paradigm(name: str) -> Adapter:
+    try:
+        return _PARADIGMS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown paradigm {name!r}; known: {paradigm_names()}") from None

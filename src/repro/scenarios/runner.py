@@ -1,0 +1,293 @@
+"""Lower a ``ScenarioSpec`` to one ``lax.scan`` loop and run it.
+
+The runner owns the *only* scenario loop in the repo: every paradigm
+contributes a thin adapter (``registry.register_paradigm``) that maps a
+spec to ``(state0, step_fn)``, and ``run(spec)`` scans the step over
+``spec.num_steps`` PRNG keys, collects the uniform per-step metrics
+(msd / loss / consensus), summarizes attack success, measures wall
+clock, and -- for pallas-backend specs -- attaches the
+``mm_aggregate.launch_plan`` audit of the kernel geometry the run used.
+
+``diffusion_loop`` / ``federated_loop`` are the same step functions
+scanned without the spec layer; ``core.diffusion.run_diffusion`` and
+``core.federated.run_federated`` delegate here so the legacy public
+API and the scenario subsystem share one loop body (bit-for-bit).
+
+The sharded paradigm defaults to the stacked single-program lowering
+(mathematically identical to the shard_map collectives -- rs_mm is an
+exact reshard of the same estimator); ``paradigm_kwargs``
+``(("collective", "rs_mm"),)`` opts into the real per-rank
+``core.sharded.robust_all_reduce`` lowering on a K-device mesh (the
+building block the robust-FSDP train step uses per layer).
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro import compat
+from repro.core import diffusion, federated, sharded
+from repro.data import synthetic
+from repro.scenarios import metrics, registry
+from repro.scenarios.spec import ScenarioResult, ScenarioSpec
+
+
+# ===========================================================================
+# the one scan loop
+# ===========================================================================
+
+def scan_loop(step_fn, state0, key, num_steps: int):
+    """Scan ``step_fn(state, key_i, i) -> (state, metrics_dict)`` over
+    ``num_steps`` split keys; returns (final state, stacked metrics)."""
+    keys = jax.random.split(key, num_steps)
+
+    def body(state, xs):
+        key_i, i = xs
+        return step_fn(state, key_i, i)
+
+    return jax.lax.scan(body, state0, (keys, jnp.arange(num_steps)))
+
+
+# ===========================================================================
+# paradigm step functions (shared by spec adapters and legacy wrappers)
+# ===========================================================================
+
+def _diffusion_step_fn(grad_fn, comb, config, w_star):
+    def step(w, key, i):
+        w_next = diffusion.diffusion_step(
+            w, key, grad_fn=grad_fn, combination=comb, config=config, step=i)
+        # benign set at THIS step: time-varying schedules move the
+        # malicious identity, and metrics must average over the agents
+        # that were honest when the step ran (static schedules ignore i,
+        # preserving the historical mask bit-for-bit).
+        benign = ~config.byzantine.malicious_mask(w.shape[0], i)
+        return w_next, {
+            "msd": diffusion.msd(w_next, w_star, benign),
+            "consensus": metrics.consensus_distance(w_next, benign),
+        }
+    return step
+
+
+def _federated_step_fn(grad_fn, config, w_star):
+    def step(w, key, i):
+        w_next = federated.federated_round(
+            w, key, grad_fn=grad_fn, config=config, step=i)
+        return w_next, {
+            "msd": metrics.msd_single(w_next, w_star),
+            "consensus": jnp.zeros((), w_next.dtype),
+        }
+    return step
+
+
+def _sharded_step_fn(grad_fn, agg_fn, byz, k_agents, step_size, w_star):
+    """Distributed-SGD-with-robust-all-reduce, stacked lowering: one
+    shared model, K per-agent gradients, one robust aggregate per step
+    (the Mode-A train-step semantics on the linear problem)."""
+    def step(w, key, i):
+        g_key, a_key = jax.random.split(key)
+        grads = grad_fn(jnp.broadcast_to(w, (k_agents,) + w.shape), g_key)
+        grads = byz.apply(grads, a_key, i)
+        w_next = w - step_size * agg_fn(grads, None)
+        return w_next, {
+            "msd": metrics.msd_single(w_next, w_star),
+            "consensus": jnp.zeros((), w_next.dtype),
+        }
+    return step
+
+
+def _sharded_collective_step_fn(grad_fn, byz, k_agents, step_size, w_star,
+                                method, agg_name, agg_kwargs):
+    """Real shard_map lowering: each rank owns one agent's gradient and
+    the aggregate is a ``core.sharded.robust_all_reduce`` collective --
+    the same building block the robust-FSDP train step applies per
+    layer.  PRNG keys cross the shard_map boundary as raw key data."""
+    mesh = compat.make_mesh((k_agents,), ("agents",))
+
+    def per_rank(w, key_data, i):
+        key = jax.random.wrap_key_data(key_data)
+        g_key, a_key = jax.random.split(key)
+        # the stacked draw is replicated so every rank sees the same
+        # samples (collusion attacks need the full stack); each rank
+        # then keeps only its own row for the collective.
+        grads = grad_fn(jnp.broadcast_to(w, (k_agents,) + w.shape), g_key)
+        grads = byz.apply(grads, a_key, i)
+        g_own = grads[jax.lax.axis_index("agents")]
+        est = sharded.robust_all_reduce(
+            g_own, "agents", method=method, aggregator=agg_name,
+            **agg_kwargs)
+        return w - step_size * est
+
+    smapped = compat.shard_map(per_rank, mesh=mesh,
+                               in_specs=(P(), P(), P()), out_specs=P(),
+                               check_vma=False)
+
+    def step(w, key, i):
+        w_next = smapped(w, jax.random.key_data(key), i)
+        return w_next, {
+            "msd": metrics.msd_single(w_next, w_star),
+            "consensus": jnp.zeros((), w_next.dtype),
+        }
+    return step
+
+
+# ===========================================================================
+# legacy loops (called by core.diffusion / core.federated wrappers)
+# ===========================================================================
+
+def diffusion_loop(*, grad_fn, combination, config, w_star, num_iters: int,
+                   key, w0=None):
+    """The REF-Diffusion loop; returns (final W, {metric: (T,) array})."""
+    combination_np = np.asarray(combination)
+    diffusion.check_compatible(config, combination_np)
+    k_agents = combination_np.shape[0]
+    if w0 is None:
+        w0 = jnp.zeros((k_agents, w_star.shape[0]), dtype=w_star.dtype)
+    comb = jnp.asarray(combination, dtype=w0.dtype)
+    step = _diffusion_step_fn(grad_fn, comb, config, w_star)
+    return scan_loop(step, w0, key, num_iters)
+
+
+def federated_loop(*, grad_fn, config, w_star, num_rounds: int, key, w0=None):
+    """The FedAvg-with-robust-server loop; returns (final w, metrics)."""
+    if w0 is None:
+        w0 = jnp.zeros_like(w_star)
+    step = _federated_step_fn(grad_fn, config, w_star)
+    return scan_loop(step, w0, key, num_rounds)
+
+
+# ===========================================================================
+# spec adapters
+# ===========================================================================
+
+def _problem(spec: ScenarioSpec) -> synthetic.LinearModelProblem:
+    return synthetic.LinearModelProblem(
+        dim=spec.dim, noise_var=spec.noise_var, seed=spec.data_seed)
+
+
+@registry.register_paradigm("diffusion")
+def _diffusion_adapter(spec: ScenarioSpec):
+    problem = _problem(spec)
+    grad_fn = synthetic.make_stacked_grad_fn(
+        problem, spec.num_agents, data=spec.data,
+        alpha=spec.dirichlet_alpha, seed=spec.data_seed)
+    agg_name, _ = spec.resolved_aggregator()
+    config = diffusion.DiffusionConfig(
+        step_size=spec.step_size, aggregator=agg_name,
+        agg_kwargs=spec.agg_kwargs, byzantine=spec.byzantine())
+    comb_np = spec.combination()
+    diffusion.check_compatible(config, comb_np)
+    w_star = problem.w_star
+    w0 = jnp.zeros((spec.num_agents, spec.dim), dtype=w_star.dtype)
+    comb = jnp.asarray(comb_np, dtype=w0.dtype)
+    return w0, _diffusion_step_fn(grad_fn, comb, config, w_star)
+
+
+@registry.register_paradigm("federated")
+def _federated_adapter(spec: ScenarioSpec):
+    problem = _problem(spec)
+    grad_fn = synthetic.make_client_grad_fn(
+        problem, spec.num_agents, data=spec.data,
+        alpha=spec.dirichlet_alpha, seed=spec.data_seed)
+    agg_name, _ = spec.resolved_aggregator()
+    config = federated.FederatedConfig(
+        num_clients=spec.num_agents,
+        clients_per_round=spec.clients_per_round(),
+        local_steps=spec.local_steps, step_size=spec.step_size,
+        aggregator=agg_name, agg_kwargs=spec.agg_kwargs,
+        byzantine=spec.byzantine())
+    w_star = problem.w_star
+    w0 = jnp.zeros_like(w_star)
+    return w0, _federated_step_fn(grad_fn, config, w_star)
+
+
+@registry.register_paradigm("sharded")
+def _sharded_adapter(spec: ScenarioSpec):
+    problem = _problem(spec)
+    grad_fn = synthetic.make_stacked_grad_fn(
+        problem, spec.num_agents, data=spec.data,
+        alpha=spec.dirichlet_alpha, seed=spec.data_seed)
+    agg_name, agg_kw = spec.resolved_aggregator()
+    byz = spec.byzantine()
+    w_star = problem.w_star
+    w0 = jnp.zeros_like(w_star)
+    collective = dict(spec.paradigm_kwargs).get("collective")
+    if collective:
+        if spec.backend == "pallas":
+            raise ValueError(
+                "collective sharded scenarios run inside shard_map, which "
+                "cannot host a pallas_call; use backend='jnp'")
+        if jax.local_device_count() < spec.num_agents:
+            raise RuntimeError(
+                f"collective sharded scenario needs >= {spec.num_agents} "
+                f"devices, have {jax.local_device_count()}")
+        method = "mean" if agg_name == "mean" else collective
+        step = _sharded_collective_step_fn(
+            grad_fn, byz, spec.num_agents, spec.step_size, w_star,
+            method, agg_name, agg_kw)
+    else:
+        agg_fn = sharded.engine_aggregator(agg_name, **agg_kw)
+        step = _sharded_step_fn(grad_fn, agg_fn, byz, spec.num_agents,
+                                spec.step_size, w_star)
+    return w0, step
+
+
+# ===========================================================================
+# run
+# ===========================================================================
+
+def _launch_audit(spec: ScenarioSpec) -> Optional[dict]:
+    """The kernel-launch geometry + modeled HBM traffic the run's
+    aggregation used (pallas backend only).  Uses the same
+    ``launch_plan`` code path the launcher configures the pallas_call
+    with, so the audit reflects the kernel that actually ran."""
+    agg_name, kw = spec.resolved_aggregator()
+    if spec.backend != "pallas" or agg_name != "mm_pallas":
+        return None
+    from repro.kernels import mm_aggregate  # deferred: keep import light
+    if spec.paradigm == "diffusion":
+        # batched path: all K neighborhood weight columns, one launch
+        k, n = spec.num_agents, spec.num_agents
+    elif spec.paradigm == "federated":
+        k, n = spec.clients_per_round(), 1
+    else:
+        k, n = spec.num_agents, 1
+    plan = mm_aggregate.launch_plan(
+        k, spec.dim, n,
+        block_m=kw.get("block_m"), block_k=kw.get("block_k"))
+    audit = plan._asdict()
+    audit["grid"] = list(audit["grid"])
+    return audit
+
+
+def run(spec: ScenarioSpec, *, w0=None) -> ScenarioResult:
+    """Lower the spec through its paradigm adapter and run the scan.
+
+    Wall clock is end-to-end (first call per spec shape includes XLA
+    compilation).  Histories come back as numpy; ``loss`` is the
+    expected excess streaming MSE (msd + sigma_v^2) derived post-run.
+    """
+    adapter = registry.get_paradigm(spec.paradigm)
+    state0, step_fn = adapter(spec)
+    if w0 is not None:
+        state0 = w0
+    key = jax.random.key(spec.seed)
+    t0 = time.perf_counter()
+    final_state, hist = scan_loop(step_fn, state0, key, spec.num_steps)
+    hist = jax.block_until_ready(hist)
+    wall = time.perf_counter() - t0
+    history = {name: np.asarray(h) for name, h in hist.items()}
+    history["loss"] = history["msd"] + spec.noise_var
+    return ScenarioResult(
+        spec=spec,
+        history=history,
+        summary=metrics.attack_summary(history["msd"]),
+        wall_clock_s=wall,
+        launch_audit=_launch_audit(spec),
+        final_state=final_state,
+    )

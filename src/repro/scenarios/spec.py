@@ -1,0 +1,217 @@
+"""Declarative scenario specification.
+
+One frozen ``ScenarioSpec`` names everything a robust-aggregation run
+needs -- paradigm, topology, aggregator + engine backend, attack (+
+time-varying schedule), data heterogeneity, participation -- and
+``runner.run(spec)`` lowers it to a single ``lax.scan`` loop.  Every
+field is hashable (kwargs travel as ``(key, value)`` tuples) so specs
+can key caches and parametrize tests directly.
+
+``ScenarioResult`` is the uniform output: per-step metric histories,
+attack-success summary, wall clock, and -- for pallas-backend runs --
+the ``mm_aggregate.launch_plan`` audit of the kernel launch the run
+used.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+import numpy as np
+
+from repro.core import aggregators, attacks, graph
+from repro.scenarios import registry
+
+PARADIGMS = ("federated", "diffusion", "sharded")
+BACKENDS = ("pallas", "jnp")
+DATA_SPLITS = ("iid", "dirichlet")
+
+# names the engine backend applies to (the paper's MM/Tukey estimator)
+MM_AGGREGATORS = ("mm_tukey", "ref", "mm_pallas")
+
+
+@dataclasses.dataclass(frozen=True)
+class ScenarioSpec:
+    """One declarative scenario; see module docstring.
+
+    ``num_steps`` is rounds (federated) or iterations (diffusion /
+    sharded).  ``seed`` drives the run's PRNG stream; ``data_seed``
+    fixes the problem instance (w_star, Dirichlet mixture) so sweeps
+    over ``seed`` share one problem.
+    """
+
+    name: str = ""
+    paradigm: str = "diffusion"
+
+    # problem
+    num_agents: int = 16
+    dim: int = 10
+    noise_var: float = 0.01
+    data: str = "iid"                  # iid | dirichlet
+    dirichlet_alpha: float = 1.0
+    data_seed: int = 0
+
+    # topology (diffusion; federated is implicitly a star)
+    topology: str = "fully_connected"
+    topology_kwargs: tuple = ()
+    weights: str = "uniform"           # uniform | metropolis
+
+    # aggregation
+    aggregator: str = "mm_tukey"
+    agg_kwargs: tuple = ()
+    backend: str = "jnp"               # pallas | jnp (engine backend)
+
+    # adversary
+    attack: str = "additive"
+    num_malicious: int = 0
+    attack_kwargs: tuple = ()
+    attack_schedule: str = "static"    # static | intermittent | rotating
+    schedule_kwargs: tuple = ()
+
+    # dynamics
+    participation: float = 1.0         # federated: fraction sampled per round
+    local_steps: int = 5               # federated local SGD steps
+    step_size: float = 0.05
+    num_steps: int = 400
+    seed: int = 0
+
+    # adapter-specific extras, e.g. (("collective", "rs_mm"),) for the
+    # sharded paradigm's real shard_map lowering
+    paradigm_kwargs: tuple = ()
+
+    def __post_init__(self):
+        known = set(PARADIGMS) | set(registry.paradigm_names())
+        if self.paradigm not in known:
+            raise ValueError(
+                f"unknown paradigm {self.paradigm!r}; known: {sorted(known)}")
+        if self.backend not in BACKENDS:
+            raise ValueError(
+                f"unknown backend {self.backend!r}; known: {BACKENDS}")
+        if self.data not in DATA_SPLITS:
+            raise ValueError(
+                f"unknown data split {self.data!r}; known: {DATA_SPLITS}")
+        if not 0.0 < self.participation <= 1.0:
+            raise ValueError(
+                f"participation must be in (0, 1], got {self.participation}")
+        if self.participation < 1.0 and self.paradigm != "federated":
+            raise ValueError(
+                "partial participation is a federated-only field")
+        if self.attack_schedule not in attacks.SCHEDULES:
+            raise ValueError(
+                f"unknown schedule {self.attack_schedule!r}; "
+                f"known: {attacks.SCHEDULES}")
+        if self.backend == "pallas" and \
+                self.resolved_aggregator()[0] != "mm_pallas":
+            raise ValueError(
+                "backend='pallas' applies to the MM aggregator family "
+                f"({MM_AGGREGATORS}); got {self.aggregator!r}")
+        # fail fast on unknown registry names (registry lookups raise)
+        attacks.get_attack(self.attack)
+        aggregators.get_aggregator(self.aggregator)
+        if self.topology not in graph.topology_names():
+            raise ValueError(
+                f"unknown topology {self.topology!r}; "
+                f"known: {graph.topology_names()}")
+        if not 0 <= self.num_malicious < self.num_agents:
+            raise ValueError(
+                f"num_malicious must be in [0, {self.num_agents}), "
+                f"got {self.num_malicious}")
+
+    # -- derived pieces ----------------------------------------------------
+
+    def effective_topology(self) -> str:
+        """The topology the run actually exercises: the ``topology``
+        field drives the diffusion combination matrix only -- federated
+        is a fusion-center star and sharded an all-to-all collective by
+        construction, whatever the field says."""
+        if self.paradigm == "federated":
+            return "star"
+        if self.paradigm == "sharded":
+            return "fully_connected"
+        return self.topology
+
+    def label(self) -> str:
+        if self.name:
+            return self.name
+        return (f"{self.paradigm}/{self.effective_topology()}/{self.aggregator}"
+                f"-{self.backend}/{self.attack}x{self.num_malicious}"
+                f"/{self.data}/K{self.num_agents}_M{self.dim}"
+                f"_T{self.num_steps}_s{self.seed}")
+
+    def byzantine(self) -> attacks.ByzantineConfig:
+        return attacks.ByzantineConfig(
+            num_malicious=self.num_malicious,
+            attack=self.attack,
+            attack_kwargs=self.attack_kwargs,
+            schedule=self.attack_schedule,
+            schedule_kwargs=self.schedule_kwargs,
+        )
+
+    def resolved_aggregator(self) -> tuple:
+        """(registry name, kwargs dict) with the backend folded in: the
+        MM family lowers to the fused kernel under ``backend='pallas'``
+        and to the structure-preserving jnp engine path otherwise."""
+        name, kw = self.aggregator, dict(self.agg_kwargs)
+        if name in MM_AGGREGATORS:
+            name = "mm_pallas" if self.backend == "pallas" else "mm_tukey"
+        return name, kw
+
+    def adjacency(self) -> np.ndarray:
+        return graph.get_topology(self.topology, self.num_agents,
+                                  **dict(self.topology_kwargs))
+
+    def combination(self) -> np.ndarray:
+        return graph.combination_matrix(self.adjacency(), self.weights)
+
+    def clients_per_round(self) -> int:
+        return max(1, round(self.participation * self.num_agents))
+
+
+@dataclasses.dataclass
+class ScenarioResult:
+    """Uniform result of ``runner.run``: per-step histories (numpy), an
+    attack-success summary, wall clock, and the pallas launch audit."""
+
+    spec: ScenarioSpec
+    history: Dict[str, np.ndarray]     # msd / loss / consensus, (num_steps,)
+    summary: Dict[str, Any]            # steady_msd / peak_msd / broke_down
+    wall_clock_s: float
+    launch_audit: Optional[dict]       # mm_aggregate.launch_plan (pallas)
+    final_state: Any                   # (M,) server model or (K, M) stack
+
+    @property
+    def final_msd(self) -> float:
+        return float(self.history["msd"][-1])
+
+    def finite(self) -> bool:
+        return all(bool(np.isfinite(h).all()) for h in self.history.values())
+
+    def to_row(self) -> dict:
+        """Strict-JSON-able row for BENCH_scenarios.json (non-finite
+        metrics become null, not the non-standard Infinity token)."""
+        def num(x):
+            return float(x) if np.isfinite(x) else None
+
+        s = self.spec
+        return {
+            "name": s.label(),
+            "paradigm": s.paradigm,
+            "topology": s.effective_topology(),
+            "aggregator": s.aggregator,
+            "backend": s.backend,
+            "attack": s.attack,
+            "num_malicious": s.num_malicious,
+            "schedule": s.attack_schedule,
+            "data": s.data,
+            "num_agents": s.num_agents,
+            "dim": s.dim,
+            "num_steps": s.num_steps,
+            "seed": s.seed,
+            "wall_clock_s": round(self.wall_clock_s, 4),
+            "final_msd": num(self.final_msd),
+            "steady_msd": num(self.summary["steady_msd"]),
+            "broke_down": self.summary["broke_down"],
+            "finite": self.finite(),
+            "launch_audit": self.launch_audit,
+        }

@@ -12,35 +12,28 @@ Full sweeps (the actual figure) live in benchmarks/fig1_msd.py; these
 tests run reduced iteration counts for CI speed.
 """
 
-import jax
-import jax.numpy as jnp
 import numpy as np
-import pytest
 
+from repro import scenarios
 from repro.configs import paper_lsq
-from repro.core import attacks, diffusion, graph
-from repro.data import synthetic
-
-PROB = synthetic.LinearModelProblem(dim=paper_lsq.DIM,
-                                    noise_var=paper_lsq.NOISE_VAR)
-COMB = graph.uniform_weights(graph.fully_connected(paper_lsq.NUM_AGENTS))
 
 
 def msd_curve(agg, n_mal, delta, iters=500, seed=0):
-    byz = attacks.ByzantineConfig(
-        num_malicious=n_mal, attack="additive",
-        attack_kwargs=(("delta", delta),))
-    cfg = diffusion.DiffusionConfig(step_size=paper_lsq.STEP_SIZE,
-                                    aggregator=agg, byzantine=byz)
-    _, hist = diffusion.run_diffusion(
-        grad_fn=PROB.grad_fn(), combination=COMB, config=cfg,
-        w_star=PROB.w_star, num_iters=iters, key=jax.random.key(seed))
-    return np.asarray(hist)
+    """The paper's setup as one declarative spec: all seed plumbing
+    (run key AND problem instance) lives in the frozen spec, so every
+    curve is reproducible from its spec alone."""
+    sp = scenarios.ScenarioSpec(
+        paradigm="diffusion", num_agents=paper_lsq.NUM_AGENTS,
+        dim=paper_lsq.DIM, noise_var=paper_lsq.NOISE_VAR,
+        topology="fully_connected", aggregator=agg,
+        attack="additive", num_malicious=n_mal,
+        attack_kwargs=(("delta", delta),),
+        step_size=paper_lsq.STEP_SIZE, num_steps=iters,
+        seed=seed, data_seed=0)
+    return scenarios.run(sp).history["msd"]
 
 
-def steady(h, frac=0.2):
-    n = max(1, int(len(h) * frac))
-    return float(np.mean(h[-n:]))
+steady = scenarios.steady   # trailing-20% steady-state level
 
 
 def test_c1_mean_breaks_down_with_delta():
