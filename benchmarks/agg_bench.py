@@ -145,11 +145,12 @@ def main(smoke: bool = False) -> tuple[list[tuple], list[dict]]:
         audits.append(traffic_audit(k, m))
 
     # scenario-runner path: one declarative spec -> a full scan'd run
-    # per paradigm.  These rows are END-TO-END wall clock including XLA
-    # compile (a different quantity from the steady-state per-call
-    # timings above) -- named *_wall_e2e and reported with no modeled
-    # bytes / launch count so trajectory tooling never mixes the two;
-    # BENCH_scenarios.json is the canonical per-spec wall-clock record.
+    # per paradigm.  The runner AOT-compiles the scan before timing it,
+    # so these rows are STEADY wall clock (compilation excluded by
+    # construction); the compile cost is reported as its own
+    # *_compile row so trajectory tooling never mixes the two.
+    # BENCH_scenarios.json is the canonical per-spec record (it carries
+    # compile_s and wall_clock_s side by side).
     from repro import scenarios
     sc = dict(num_agents=8, dim=8, num_steps=20, num_malicious=2,
               attack="additive") if smoke else \
@@ -163,10 +164,35 @@ def main(smoke: bool = False) -> tuple[list[tuple], list[dict]]:
                                     aggregator="mm_tukey", **sc)
         res = scenarios.run(sp)
         coords = sc["num_steps"] * sc["num_agents"] * sc["dim"]
+        tag = (f"{paradigm}/mm_tukey-{backend}"
+               f"/K{sc['num_agents']}_M{sc['dim']}_T{sc['num_steps']}")
         us = res.wall_clock_s * 1e6
-        rows.append((f"scenario_wall_e2e/{paradigm}/mm_tukey-{backend}"
-                     f"/K{sc['num_agents']}_M{sc['dim']}_T{sc['num_steps']}",
-                     us, coords / us, None, 0))
+        rows.append((f"scenario_wall_steady/{tag}", us, coords / us, None, 0))
+        rows.append((f"scenario_compile/{tag}", res.compile_s * 1e6, 0.0,
+                     None, 0))
+
+    # LM-substrate scenario: the spec drives launch.steps' robust train
+    # step (per-agent grads -> stacked MM aggregation -> optimizer) in
+    # the same scan; steady wall is per-train-step cost, jnp backend so
+    # the row times the engine path rather than interpret-mode pallas.
+    sub = scenarios.ScenarioSpec(
+        paradigm="substrate", model_config="qwen3-0.6b",
+        aggregator="mm_tukey", backend="jnp",
+        num_agents=4 if smoke else 8, num_steps=2 if smoke else 10,
+        num_malicious=1, attack="additive",
+        paradigm_kwargs=(("batch_per_agent", 1),
+                         ("seq_len", 8 if smoke else 16)))
+    res = scenarios.run(sub)
+    # coords = aggregated coordinates, consistent with every other row:
+    # Mode A aggregates one full-parameter-sized stack per step
+    n_params = sum(int(x.size) for x in jax.tree.leaves(res.final_state[0]))
+    coords = sub.num_steps * n_params
+    tag = (f"substrate[qwen3-0.6b]/mm_tukey-jnp"
+           f"/K{sub.num_agents}_T{sub.num_steps}")
+    rows.append((f"scenario_wall_steady/{tag}", res.wall_clock_s * 1e6,
+                 coords / (res.wall_clock_s * 1e6), None, 0))
+    rows.append((f"scenario_compile/{tag}", res.compile_s * 1e6, 0.0,
+                 None, 0))
 
     # weighted-pytree engine path: the whole gradient tree in ONE launch
     for k in (8,) if smoke else (8, 32):

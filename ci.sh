@@ -12,7 +12,12 @@ cd "$(dirname "$0")"
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 python -m pytest -x -q "$@"
 python benchmarks/agg_bench.py --smoke --json BENCH_agg.json
-# scenario smoke sweep: 3 tiny specs covering all three paradigms on the
-# pallas backend (each result carries the kernel launch audit); exits
-# non-zero on any non-finite metric and emits per-spec wall-clock rows.
+# scenario smoke sweep: 3 tiny specs covering the three linear paradigms
+# on the pallas backend (each result carries the kernel launch audit);
+# exits non-zero on any non-finite metric and emits per-spec rows with
+# compile_s (XLA lower+compile) and wall_clock_s (steady run) separated.
 python examples/scenario_sweep.py --smoke --json BENCH_scenarios.json
+# substrate smoke spec: one LM-substrate scenario driving launch.steps'
+# robust train step through the same runner (pallas backend -> per-layout
+# launch audit); the sweep exits non-zero on non-finite loss.
+python examples/scenario_sweep.py --paradigm substrate --smoke

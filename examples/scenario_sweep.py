@@ -6,12 +6,21 @@ by the same ``scenarios.run`` harness.
       --paradigm diffusion federated sharded \
       --attack additive alie scm --agg mean mm_tukey --seeds 0 1
 
+  # the LM substrate: the spec drives launch.steps' robust train step
+  PYTHONPATH=src python examples/scenario_sweep.py \
+      --paradigm substrate --smoke
+
 ``--smoke`` shrinks the problem (tiny K/M, few steps) for CI; with no
 explicit matrix arguments it runs the CI preset: three pallas-backend
-specs covering all three paradigms, each carrying the
-``mm_aggregate.launch_plan`` audit.  Exits non-zero if ANY scenario
-produces a non-finite metric.  ``--json PATH`` writes the per-spec
-wall-clock rows as BENCH_scenarios.json.
+specs covering the three linear paradigms, each carrying the
+``mm_aggregate.launch_plan`` audit.  ``--paradigm substrate`` trains
+``--model`` (default qwen3-0.6b smoke config; ``paper_lsq`` for the
+linear substrate) through the launch.steps aggregation path -- pallas
+backend by default so the per-layout launch audit is attached.  Exits
+non-zero if ANY scenario produces a non-finite metric.  ``--json PATH``
+writes the per-spec rows -- with ``compile_s`` (XLA lower+compile) and
+``wall_clock_s`` (steady run, excludes compilation) separated -- as
+BENCH_scenarios.json.
 """
 
 from __future__ import annotations
@@ -25,9 +34,42 @@ from repro import scenarios
 FULL = dict(num_agents=16, dim=10, num_steps=300, num_malicious=3)
 SMOKE = dict(num_agents=8, dim=8, num_steps=25, num_malicious=2)
 
+# the substrate trains a real model per step; keep the grids tight
+SUBSTRATE_FULL = dict(num_agents=8, num_steps=20, num_malicious=2,
+                      paradigm_kwargs=(("batch_per_agent", 2),
+                                       ("seq_len", 16)))
+SUBSTRATE_SMOKE = dict(num_agents=4, num_steps=3, num_malicious=1,
+                       paradigm_kwargs=(("batch_per_agent", 1),
+                                        ("seq_len", 8)))
+
 DEFAULT_PARADIGMS = ("diffusion", "federated", "sharded")
 DEFAULT_ATTACKS = ("additive", "alie", "scm")
 DEFAULT_AGGS = ("mean", "mm_tukey")
+SUBSTRATE_DEFAULT_ATTACKS = ("additive",)
+SUBSTRATE_DEFAULT_AGGS = ("mm_tukey",)
+
+
+def _substrate_specs(ns) -> list:
+    sizes = dict(SUBSTRATE_SMOKE if ns.smoke else SUBSTRATE_FULL)
+    if ns.malicious is not None:
+        sizes["num_malicious"] = ns.malicious
+    if ns.steps is not None:
+        sizes["num_steps"] = ns.steps
+    specs = []
+    for attack in ns.attack or SUBSTRATE_DEFAULT_ATTACKS:
+        for agg in ns.agg or SUBSTRATE_DEFAULT_AGGS:
+            for seed in ns.seeds:
+                # pallas by default: the audit of every aggregated tree
+                # layout rides on the result (an MM-family requirement)
+                backend = ns.backend or (
+                    "pallas" if agg in scenarios.spec.MM_AGGREGATORS
+                    else "jnp")
+                specs.append(scenarios.ScenarioSpec(
+                    paradigm="substrate", model_config=ns.model,
+                    attack=attack, aggregator=agg, backend=backend,
+                    data=ns.data, dirichlet_alpha=ns.alpha, seed=seed,
+                    **sizes))
+    return specs
 
 
 def build_specs(ns) -> list:
@@ -44,9 +86,9 @@ def build_specs(ns) -> list:
 
     ci_preset = ns.smoke and not (ns.paradigm or ns.attack or ns.agg)
     if ci_preset:
-        # the 3-spec CI matrix: every paradigm once, pallas backend by
-        # default so each result carries the kernel-launch audit (an
-        # explicit --backend still wins)
+        # the 3-spec CI matrix: every linear paradigm once, pallas
+        # backend by default so each result carries the kernel-launch
+        # audit (an explicit --backend still wins)
         return [
             scenarios.ScenarioSpec(
                 paradigm=p, aggregator="mm_tukey",
@@ -58,6 +100,9 @@ def build_specs(ns) -> list:
 
     specs = []
     for paradigm in ns.paradigm or DEFAULT_PARADIGMS:
+        if paradigm == "substrate":
+            specs.extend(_substrate_specs(ns))
+            continue
         for attack in ns.attack or DEFAULT_ATTACKS:
             for agg in ns.agg or DEFAULT_AGGS:
                 for seed in ns.seeds:
@@ -83,7 +128,11 @@ def main(argv=None) -> int:
     ap.add_argument("--backend", default=None,
                     choices=list(scenarios.BACKENDS),
                     help="engine backend (default: jnp; the --smoke CI "
-                         "preset defaults to pallas for the launch audit)")
+                         "preset and the substrate default to pallas for "
+                         "the launch audit)")
+    ap.add_argument("--model", default="qwen3-0.6b",
+                    help="substrate model: 'paper_lsq' or a configs arch "
+                         "name (smoke config)")
     ap.add_argument("--data", default="iid", choices=["iid", "dirichlet"])
     ap.add_argument("--alpha", type=float, default=1.0,
                     help="dirichlet concentration for --data dirichlet")
@@ -101,7 +150,7 @@ def main(argv=None) -> int:
     rows = []
     bad = []
     hdr = (f"{'scenario':68s} {'steady MSD':>12s} {'final MSD':>12s} "
-           f"{'wall s':>8s} {'audit':>5s}")
+           f"{'compile s':>9s} {'wall s':>8s} {'audit':>5s}")
     print(hdr)
     print("-" * len(hdr))
     for sp in specs:
@@ -111,7 +160,8 @@ def main(argv=None) -> int:
         if not res.finite():
             bad.append(sp.label())
         print(f"{sp.label():68s} {res.summary['steady_msd']:12.3e} "
-              f"{res.final_msd:12.3e} {row['wall_clock_s']:8.2f} "
+              f"{res.final_msd:12.3e} {row['compile_s']:9.2f} "
+              f"{row['wall_clock_s']:8.3f} "
               f"{'yes' if row['launch_audit'] else 'no':>5s}")
 
     if ns.json:

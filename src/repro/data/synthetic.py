@@ -120,6 +120,39 @@ def make_stacked_grad_fn(problem: LinearModelProblem, k_agents: int, *,
     return grad
 
 
+def make_stacked_loss_grad_fn(problem: LinearModelProblem, k_agents: int, *,
+                              data: str = "iid", alpha: float = 1.0,
+                              num_components: int = 4, seed: int = 0):
+    """Like ``make_stacked_grad_fn`` but returns per-agent training
+    losses alongside the gradients: ((K, M), key) -> ((K,), (K, M)) with
+    loss_k = 0.5 * (d_k - u_k^T w_k)^2, the streaming squared residual
+    whose gradient is exactly the LMS gradient (Eq. 33).  Used by the
+    substrate paradigm, which reports real training loss instead of the
+    analytic MSD."""
+    if data not in ("iid", "dirichlet"):
+        raise ValueError(f"unknown data split {data!r}")
+    w_star = problem.w_star
+    sigma_v = float(np.sqrt(problem.noise_var))
+    dim = problem.dim
+    if data == "dirichlet":
+        pi, scales = dirichlet_mixture(k_agents, alpha, num_components, seed)
+        log_pi = jnp.asarray(np.log(np.maximum(pi, 1e-30)), dtype=jnp.float32)
+        scales_j = jnp.asarray(scales, dtype=jnp.float32)
+
+    def loss_grad(w_stack: jnp.ndarray, key: jax.Array):
+        kc, ku, kv = jax.random.split(key, 3)
+        u = jax.random.normal(ku, (k_agents, dim), dtype=w_stack.dtype)
+        if data == "dirichlet":
+            comp = jax.random.categorical(kc, log_pi, axis=-1)       # (K,)
+            u = u * scales_j[comp].astype(w_stack.dtype)[:, None]
+        v = sigma_v * jax.random.normal(kv, (k_agents,), dtype=w_stack.dtype)
+        d = u @ w_star + v
+        err = d - jnp.sum(u * w_stack, axis=1)                       # (K,)
+        return 0.5 * err ** 2, -u * err[:, None]
+
+    return loss_grad
+
+
 def make_client_grad_fn(problem: LinearModelProblem, k_agents: int, *,
                         data: str = "iid", alpha: float = 1.0,
                         num_components: int = 4, seed: int = 0):

@@ -42,6 +42,7 @@ the train steps call.
 
 from __future__ import annotations
 
+import contextlib
 import functools
 from typing import Optional
 
@@ -51,6 +52,45 @@ import jax.numpy as jnp
 from repro.core import location, mestimators
 from repro.kernels import mm_aggregate as _k
 from repro.kernels import tuning
+
+
+# ---------------------------------------------------------------------------
+# workload recording (launch-audit ground truth)
+# ---------------------------------------------------------------------------
+# Every engine launch resolves its (K, M, N, dtype) workload and block
+# sizes through ``_opts``; inside a ``record_workloads()`` scope each
+# distinct resolution is appended to the yielded list.  Resolution
+# happens at Python/trace time (the block choice is a static jit arg),
+# so wrapping ``jax.jit(...).lower()`` of a program that aggregates is
+# enough to observe every workload the compiled program will launch --
+# this is how the scenario runner builds a launch audit that reflects
+# the geometry the engine *actually* selected (tuning-cache winner or
+# heuristic), not a parallel reconstruction.
+
+_ACTIVE_RECORDERS: list = []
+
+
+@contextlib.contextmanager
+def record_workloads():
+    """Collect {k, m, n, dtype, backend, block_m, block_k} dicts for
+    every distinct engine workload resolved inside the scope."""
+    records: list = []
+    _ACTIVE_RECORDERS.append(records)
+    try:
+        yield records
+    finally:
+        # remove by identity, not equality: nested scopes hold
+        # equal-content lists and list.remove would pop the wrong one
+        for i, r in enumerate(_ACTIVE_RECORDERS):
+            if r is records:
+                del _ACTIVE_RECORDERS[i]
+                break
+
+
+def _record_workload(entry: dict) -> None:
+    for records in _ACTIVE_RECORDERS:
+        if entry not in records:
+            records.append(dict(entry))
 
 
 def _tukey(c: float):
@@ -206,6 +246,10 @@ class AggregationEngine:
 
     def _opts(self, x, k: int, m: int, n: int = 1):
         bm, bk = self._blocks_for(x, k, m, n)
+        _record_workload({
+            "k": int(k), "m": int(m), "n": int(n),
+            "dtype": jnp.dtype(x.dtype).name, "backend": self.backend,
+            "block_m": bm, "block_k": bk})
         return dict(num_iters=self.num_iters, c=self.c, block_m=bm,
                     block_k=bk, interpret=self.interpret,
                     backend=self.backend)

@@ -311,12 +311,49 @@ def aggregate_stack(grads, mesh, par: ParallelConfig,
         treedef, [one(l, s) for l, s in zip(leaves, out_leaves)])
 
 
+def grad_consensus(grads, benign: jnp.ndarray) -> jnp.ndarray:
+    """Mean squared distance of the benign agents' stacked per-agent
+    gradients (leaves (K, ...)) from their benign centroid, summed over
+    leaves -- the pre-aggregation disagreement the robust estimator has
+    to resolve.  The scenario runner reports this as the substrate
+    paradigm's ``consensus`` metric (a single shared model has no
+    per-agent parameter spread)."""
+    bf = benign.astype(jnp.float32)
+    nb = jnp.maximum(jnp.sum(bf), 1.0)
+    total = jnp.zeros((), jnp.float32)
+    for g in jax.tree.leaves(grads):
+        gf = g.astype(jnp.float32)
+        bm = bf.reshape((bf.shape[0],) + (1,) * (gf.ndim - 1))
+        centroid = jnp.sum(gf * bm, axis=0) / nb
+        sq = jnp.sum((gf - centroid[None]) ** 2,
+                     axis=tuple(range(1, gf.ndim)))
+        total = total + jnp.sum(sq * bf)
+    return total / nb
+
+
 def make_train_step_gspmd(model_cfg: ModelConfig, par: ParallelConfig,
                           opt_cfg: optimizers.OptimizerConfig, mesh,
-                          byzantine: Optional[attacks_lib.ByzantineConfig] = None):
+                          byzantine: Optional[attacks_lib.ByzantineConfig] = None,
+                          k_agents: Optional[int] = None,
+                          consensus_metric: bool = False):
     """Mode A train step.  Signature: (params, opt_state, batch) ->
-    (params, opt_state, metrics)."""
-    k_agents = num_agents(mesh)
+    (params, opt_state, metrics).
+
+    ``k_agents`` overrides the mesh-derived agent count: the scenario
+    substrate (and single-host simulation generally) runs K aggregation
+    agents on fewer devices -- the agent-axis sharding constraints
+    degrade to (padded) no-ops and the aggregation statistics are
+    identical to a K-device mesh.  The step is a pure function of
+    ``(params, opt_state, batch)``, so it is scan-compatible: the
+    scenario runner scans exactly this body (see scenarios.substrate).
+
+    ``consensus_metric`` adds ``grad_consensus`` over the benign
+    per-agent gradient stacks to the metrics dict.  Opt-in: it is a
+    full extra f32 pass over the (K, param) stacks, so the production
+    train loop (which never reads it) should not pay for it.
+    """
+    if k_agents is None:
+        k_agents = num_agents(mesh)
     ax = agent_axes(mesh)
     template = jax.eval_shape(
         lambda: M.init_model(jax.random.key(0), model_cfg))
@@ -395,8 +432,16 @@ def make_train_step_gspmd(model_cfg: ModelConfig, par: ParallelConfig,
             agg = aggregate_stack(grads, mesh, par, pspecs, ax)
             new_params, new_opt = optimizers.update(opt_cfg, params, agg,
                                                     opt_state)
-            return new_params, new_opt, {"loss": jnp.mean(losses),
-                                         "grad_norm": optimizers.global_norm(agg)}
+            metrics = {"loss": jnp.mean(losses),
+                       "grad_norm": optimizers.global_norm(agg)}
+            if consensus_metric:
+                if byzantine is not None and byzantine.num_malicious > 0:
+                    benign = ~byzantine.malicious_mask(k_agents,
+                                                       opt_state.step)
+                else:
+                    benign = jnp.ones((k_agents,), bool)
+                metrics["consensus"] = grad_consensus(grads, benign)
+            return new_params, new_opt, metrics
 
     return step, pspecs
 

@@ -7,7 +7,18 @@ exercised via dryrun.py).
 Uses the reduced smoke config by default (CPU container); --full-config
 loads the assigned full architecture (only sensible on a real cluster).
 Simulates the paper's Byzantine agents as data-parallel ranks whose
-gradients are corrupted before aggregation.
+gradients are corrupted before aggregation.  ``--agents K`` simulates K
+aggregation agents on however many devices exist (the sharding
+constraints degrade to no-ops; the aggregation statistics are those of
+a K-device mesh).
+
+``--scenario`` drives the SAME run through the scenario subsystem
+instead of the local loop: the CLI arguments are lowered to a
+``ScenarioSpec(paradigm="substrate", ...)`` and executed by
+``scenarios.run`` -- one declarative spec, the shared scan loop, uniform
+loss/consensus histories, the spec-derived attack summary, and the
+per-layout kernel launch audit (``--use-kernel``), with compile and
+steady wall clock reported separately.
 """
 
 from __future__ import annotations
@@ -45,7 +56,7 @@ def build(args):
             model, d_model=args.d_model, d_ff=model.d_ff * max(scale, 1))
     par = configs.ParallelConfig(
         fsdp=False, microbatches=args.microbatches,
-        aggregation=args.aggregation)
+        aggregation=args.aggregation, use_kernel=args.use_kernel)
     opt_cfg = optimizers.OptimizerConfig(
         learning_rate=args.lr, warmup_steps=min(100, args.steps // 10 + 1),
         total_steps=args.steps)
@@ -53,9 +64,58 @@ def build(args):
     if args.malicious:
         byz = attacks.ByzantineConfig(
             num_malicious=args.malicious, attack=args.attack,
-            attack_kwargs=(("delta", args.delta),))
-    step, _ = steps.make_train_step_gspmd(model, par, opt_cfg, mesh, byz)
+            attack_kwargs=_attack_kwargs(args))
+    step, _ = steps.make_train_step_gspmd(model, par, opt_cfg, mesh, byz,
+                                          k_agents=args.agents or None)
     return mesh, model, par, opt_cfg, jax.jit(step, donate_argnums=(0, 1))
+
+
+def _attack_kwargs(args) -> tuple:
+    # --delta only parameterizes the additive attack; every other
+    # registry attack has its own kwargs (or none) and would reject it
+    return (("delta", args.delta),) if args.attack == "additive" else ()
+
+
+def run_scenario(args) -> list:
+    """Lower the CLI run to a substrate ScenarioSpec and execute it
+    through scenarios.run (the shared scan loop)."""
+    from repro import scenarios  # deferred: keep the direct path light
+
+    if args.full_config:
+        raise SystemExit(
+            "--scenario runs the reduced smoke config (the substrate "
+            "adapter builds configs.load_smoke); drop --full-config")
+    k = args.agents or num_agents(make_host_mesh(model=args.model_parallel))
+    per_agent = max(1, args.batch // k)
+    spec = scenarios.ScenarioSpec(
+        paradigm="substrate", model_config=args.arch,
+        aggregator="mean" if args.aggregation == "mean" else "mm_tukey",
+        backend="pallas" if args.use_kernel else "jnp",
+        attack=args.attack, num_malicious=args.malicious,
+        attack_kwargs=_attack_kwargs(args) if args.malicious else (),
+        num_agents=k, num_steps=args.steps, step_size=args.lr,
+        paradigm_kwargs=(
+            ("batch_per_agent", per_agent), ("seq_len", args.seq),
+            ("microbatches", args.microbatches),
+            ("aggregation", args.aggregation
+             if args.aggregation != "mean" else "rs_mm"),
+            ("num_layers", args.layers), ("d_model", args.d_model),
+            ("model_parallel", args.model_parallel),
+        ))
+    print(f"# scenario {spec.label()}")
+    res = scenarios.run(spec)
+    losses = [float(x) for x in res.history["loss"]]
+    for i in range(0, args.steps, max(1, args.log_every)):
+        print(f"step {i:5d} loss {losses[i]:.4f} "
+              f"consensus {float(res.history['consensus'][i]):.3f}")
+    print(f"# compile {res.compile_s:.2f}s  steady wall "
+          f"{res.wall_clock_s:.2f}s  broke_down={res.summary['broke_down']}")
+    if res.launch_audit:
+        n = res.launch_audit.get("n_layouts", 1)
+        print(f"# launch audit: {n} aggregated tree layout(s)")
+    print(f"# first-10 mean loss {np.mean(losses[:10]):.4f} -> "
+          f"last-10 mean {np.mean(losses[-10:]):.4f}")
+    return losses
 
 
 def main(argv=None):
@@ -72,15 +132,26 @@ def main(argv=None):
     ap.add_argument("--model-parallel", type=int, default=1)
     ap.add_argument("--aggregation", default="rs_mm",
                     choices=["mean", "gather_mm", "rs_mm"])
+    ap.add_argument("--use-kernel", action="store_true",
+                    help="fused Pallas MM kernel inside the aggregation")
+    ap.add_argument("--agents", type=int, default=0,
+                    help="simulate K aggregation agents (default: the "
+                         "mesh's device-derived agent count)")
     ap.add_argument("--malicious", type=int, default=0)
     ap.add_argument("--attack", default="additive")
     ap.add_argument("--delta", type=float, default=1000.0)
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--checkpoint", default="")
+    ap.add_argument("--scenario", action="store_true",
+                    help="run through scenarios.run as a substrate "
+                         "ScenarioSpec instead of the local loop")
     args = ap.parse_args(argv)
 
+    if args.scenario:
+        return run_scenario(args)
+
     mesh, model, par, opt_cfg, step = build(args)
-    k = num_agents(mesh)
+    k = args.agents or num_agents(mesh)
     batch = args.batch
     if batch % k:
         batch = k * max(1, batch // k)

@@ -28,6 +28,9 @@ class OptimizerConfig:
     total_steps: int = 10_000   # cosine decay horizon
     state_dtype: str = "float32"  # adam m/v storage ("bfloat16" halves the
                                   # optimizer footprint; update math stays f32)
+    schedule_kind: str = "cosine"  # cosine | constant (constant keeps the
+                                   # warmup ramp, then holds learning_rate --
+                                   # the paper's fixed-mu linear experiments)
 
 
 class AdamState(NamedTuple):
@@ -46,9 +49,13 @@ class SGDState(NamedTuple):
 
 
 def schedule(cfg: OptimizerConfig, step):
-    """Linear warmup + cosine decay to 10%."""
+    """Linear warmup + cosine decay to 10% (or flat, per schedule_kind)."""
     step = step.astype(jnp.float32)
     warm = jnp.minimum(1.0, (step + 1.0) / max(cfg.warmup_steps, 1))
+    if cfg.schedule_kind == "constant":
+        return cfg.learning_rate * warm
+    if cfg.schedule_kind != "cosine":
+        raise ValueError(f"unknown schedule_kind {cfg.schedule_kind!r}")
     frac = jnp.clip((step - cfg.warmup_steps)
                     / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
     cos = 0.1 + 0.45 * (1.0 + jnp.cos(jnp.pi * frac))

@@ -1,18 +1,30 @@
 """Unified scenario subsystem: one declarative spec drives federated,
-diffusion, and sharded runs under a shared adversary/metrics harness.
+diffusion, sharded, and substrate runs under a shared adversary/metrics
+harness.
 
   spec      -- frozen ScenarioSpec (paradigm x topology x aggregator x
                backend x attack/schedule x data split x participation)
                and the uniform ScenarioResult
   registry  -- paradigm adapter registry (a new scenario family is one
-               ``@register_paradigm`` entry)
+               ``@register_paradigm`` entry; ``Lowering`` lets an
+               adapter own its loss semantics and breakdown level)
   runner    -- run(spec): the single lax.scan loop every paradigm
-               shares; also hosts the legacy diffusion/federated loops
+               shares (AOT compile_s / steady wall_clock_s split); also
+               hosts the legacy diffusion/federated loops
   metrics   -- per-step msd/loss/consensus + attack-success summaries
+               (breakdown level derived from the spec)
+  substrate -- the LM-substrate paradigm: the spec drives launch.steps'
+               robust train step (paper_lsq or a configs arch smoke
+               model) inside the same scan
 """
 
-from repro.scenarios.metrics import attack_summary, steady  # noqa: F401
+from repro.scenarios.metrics import (  # noqa: F401
+    attack_summary,
+    breakdown_threshold,
+    steady,
+)
 from repro.scenarios.registry import (  # noqa: F401
+    Lowering,
     get_paradigm,
     paradigm_names,
     register_paradigm,
@@ -20,7 +32,12 @@ from repro.scenarios.registry import (  # noqa: F401
 from repro.scenarios.runner import run  # noqa: F401
 from repro.scenarios.spec import (  # noqa: F401
     BACKENDS,
+    LSQ_SUBSTRATE,
     PARADIGMS,
+    SUBSTRATE_AGGREGATORS,
     ScenarioResult,
     ScenarioSpec,
 )
+# NOTE: scenarios.substrate is NOT imported here -- the runner registers
+# the "substrate" paradigm with a lazy shim so that importing this
+# package does not pull the whole training stack (launch/models/optim).

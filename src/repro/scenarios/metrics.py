@@ -44,16 +44,49 @@ def steady(h: np.ndarray, frac: float = 0.2) -> float:
     return float(np.mean(h[-n:]))
 
 
+def breakdown_threshold(spec, safety: float = 25.0) -> float:
+    """Spec-derived breakdown level for ``attack_summary``.
+
+    The historical hard-wired 1.0 misclassified in both directions: a
+    slow run (small mu, short horizon) whose clean trailing mean is
+    still above 1.0 was reported as broken down, and an attacked run
+    wedged at e.g. 0.5 -- orders of magnitude above its clean steady
+    state -- was reported as fine.  Instead, model the *clean* level the
+    trailing window can reach on the linear problem (w0 = 0,
+    ||w_star|| = 1 by construction):
+
+        transient:  (1 - mu)^(2 t_tail) -- bias still decaying when the
+                    steady window opens (t_tail = 0.8 * T effective
+                    gradient steps; federated rounds take local_steps
+                    gradient steps each)
+        steady:     O(mu * sigma_v^2 * M), the paper's steady-state MSD
+                    scale
+
+    and flag breakdown only ``safety`` x above their sum.  Substrate
+    scenarios supply their own level (training loss has a different
+    scale); see scenarios.substrate.
+    """
+    mu = float(spec.step_size)
+    per_round = spec.local_steps if spec.paradigm == "federated" else 1
+    t_tail = max(int(spec.num_steps * (1.0 - 0.2)), 0) * per_round
+    contraction = min(max(1.0 - mu, 0.0), 1.0) ** (2 * t_tail)
+    steady_scale = mu * float(spec.noise_var) * spec.dim
+    return safety * (contraction + steady_scale) + 1e-9
+
+
 def attack_summary(msd_hist: np.ndarray,
                    breakdown_level: float = 1.0) -> Dict:
     """Attack-success metrics from an MSD history: the attack succeeded
     if the run diverged (non-finite) or settled above
-    ``breakdown_level`` (the clean problem settles at O(mu))."""
+    ``breakdown_level``.  The runner derives the level from the spec
+    (``breakdown_threshold``) or takes the paradigm adapter's override;
+    the 1.0 default only serves direct ad-hoc calls."""
     finite = bool(np.isfinite(msd_hist).all())
     s = steady(msd_hist) if finite else float("inf")
     return {
         "steady_msd": s,
         "peak_msd": float(np.max(msd_hist)) if finite else float("inf"),
+        "breakdown_level": float(breakdown_level),
         "broke_down": (not finite) or s > breakdown_level,
     }
 

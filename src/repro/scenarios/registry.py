@@ -1,10 +1,25 @@
 """Paradigm adapter registry.
 
-A paradigm adapter lowers a ``ScenarioSpec`` to the two pieces the
-runner's single ``lax.scan`` needs:
+A paradigm adapter lowers a ``ScenarioSpec`` to what the runner's
+single ``lax.scan`` needs.  Two forms are accepted:
 
-    adapter(spec) -> (state0, step_fn)
+    adapter(spec) -> (state0, step_fn)                  # legacy tuple
+    adapter(spec) -> Lowering(state0, step_fn, ...)     # full protocol
+
     step_fn(state, key, step_index) -> (state, {metric: scalar, ...})
+
+The ``Lowering`` form additionally lets a paradigm own its metric
+semantics instead of inheriting the linear-model defaults:
+
+  finalize(history)   post-run hook over the numpy history dict -- this
+                      is where ``loss`` is derived (the runner no longer
+                      hard-wires ``loss = msd + noise_var``; the linear
+                      paradigms do that here, the substrate reports the
+                      real training loss its scan emitted and mirrors it
+                      into ``msd`` so summaries stay uniform).
+  breakdown_level     override for the attack-success threshold (else
+                      the runner derives it from the spec via
+                      ``metrics.breakdown_threshold``).
 
 Registering a new paradigm (or a variant of an existing one) is one
 ``@register_paradigm("name")`` entry -- the runner, the sweep CLI, the
@@ -13,9 +28,29 @@ metrics and the attack wiring all come for free.
 
 from __future__ import annotations
 
-from typing import Callable, Dict
+import dataclasses
+from typing import Any, Callable, Dict, Optional
 
 Adapter = Callable
+
+
+@dataclasses.dataclass
+class Lowering:
+    """Everything the runner needs from a paradigm adapter."""
+
+    state0: Any
+    step_fn: Callable                        # (state, key, i) -> (state, metrics)
+    finalize: Optional[Callable] = None      # history dict -> history dict
+    breakdown_level: Optional[float] = None  # attack_summary threshold
+
+
+def as_lowering(out) -> Lowering:
+    """Normalize an adapter result (legacy tuple or Lowering)."""
+    if isinstance(out, Lowering):
+        return out
+    state0, step_fn = out
+    return Lowering(state0=state0, step_fn=step_fn)
+
 
 _PARADIGMS: Dict[str, Adapter] = {}
 

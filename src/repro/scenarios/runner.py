@@ -2,11 +2,14 @@
 
 The runner owns the *only* scenario loop in the repo: every paradigm
 contributes a thin adapter (``registry.register_paradigm``) that maps a
-spec to ``(state0, step_fn)``, and ``run(spec)`` scans the step over
-``spec.num_steps`` PRNG keys, collects the uniform per-step metrics
-(msd / loss / consensus), summarizes attack success, measures wall
-clock, and -- for pallas-backend specs -- attaches the
-``mm_aggregate.launch_plan`` audit of the kernel geometry the run used.
+spec to ``(state0, step_fn)`` (or a full ``registry.Lowering``), and
+``run(spec)`` AOT-compiles the scan over ``spec.num_steps`` PRNG keys
+(``compile_s``), executes it (``wall_clock_s``, never including
+compilation), collects the uniform per-step metrics (msd / loss /
+consensus), summarizes attack success against a spec-derived breakdown
+level, and attaches a launch audit built from the pallas workloads the
+aggregation engine actually resolved during tracing
+(``kernels.ops.record_workloads``).
 
 ``diffusion_loop`` / ``federated_loop`` are the same step functions
 scanned without the spec layer; ``core.diffusion.run_diffusion`` and
@@ -206,6 +209,14 @@ def _federated_adapter(spec: ScenarioSpec):
     return w0, _federated_step_fn(grad_fn, config, w_star)
 
 
+@registry.register_paradigm("substrate")
+def _substrate_adapter(spec: ScenarioSpec):
+    # lazy: the substrate pulls the whole training stack (launch/models/
+    # optim/configs); linear-paradigm users must not pay that import
+    from repro.scenarios import substrate
+    return substrate.lower(spec)
+
+
 @registry.register_paradigm("sharded")
 def _sharded_adapter(spec: ScenarioSpec):
     problem = _problem(spec)
@@ -241,53 +252,105 @@ def _sharded_adapter(spec: ScenarioSpec):
 # run
 # ===========================================================================
 
-def _launch_audit(spec: ScenarioSpec) -> Optional[dict]:
-    """The kernel-launch geometry + modeled HBM traffic the run's
-    aggregation used (pallas backend only).  Uses the same
-    ``launch_plan`` code path the launcher configures the pallas_call
-    with, so the audit reflects the kernel that actually ran."""
-    agg_name, kw = spec.resolved_aggregator()
-    if spec.backend != "pallas" or agg_name != "mm_pallas":
+def _audit_from_records(records) -> Optional[dict]:
+    """Launch audit from the workloads the engine *actually resolved*
+    while the run's scan program was traced (``ops.record_workloads``):
+    one ``mm_aggregate.launch_plan`` dict per distinct pallas workload
+    -- same (K, M, N, dtype) and block sizes the pallas_call was
+    configured with (tuning-cache winner or heuristic), so the audit is
+    ground truth, not a parallel reconstruction.  A single-workload run
+    (the linear paradigms) yields the plan dict directly; multi-layout
+    runs (the substrate aggregates per param leaf) yield
+    ``{"layouts": [...], "n_layouts": N}``."""
+    pallas = [r for r in records if r["backend"] == "pallas"]
+    if not pallas:
         return None
     from repro.kernels import mm_aggregate  # deferred: keep import light
-    if spec.paradigm == "diffusion":
-        # batched path: all K neighborhood weight columns, one launch
-        k, n = spec.num_agents, spec.num_agents
-    elif spec.paradigm == "federated":
-        k, n = spec.clients_per_round(), 1
-    else:
-        k, n = spec.num_agents, 1
-    plan = mm_aggregate.launch_plan(
-        k, spec.dim, n,
-        block_m=kw.get("block_m"), block_k=kw.get("block_k"))
-    audit = plan._asdict()
-    audit["grid"] = list(audit["grid"])
-    return audit
+    plans = []
+    for r in pallas:
+        plan = mm_aggregate.launch_plan(
+            r["k"], r["m"], r["n"], dtype=r["dtype"],
+            block_m=r["block_m"], block_k=r["block_k"])
+        d = plan._asdict()
+        d["grid"] = list(d["grid"])
+        plans.append(d)
+    if len(plans) == 1:
+        return plans[0]
+    return {"layouts": plans, "n_layouts": len(plans)}
+
+
+def _validated_override(state0, w0, spec: ScenarioSpec):
+    """Validate a ``w0`` state override against the adapter's ``state0``
+    (structure and per-leaf shape; dtype is cast to the adapter's).  A
+    wrong-shape override used to broadcast silently in the stacked
+    paradigms or error deep inside the scan -- fail fast instead."""
+    exp_leaves, exp_def = jax.tree.flatten(state0)
+    got_leaves, got_def = jax.tree.flatten(
+        jax.tree.map(jnp.asarray, w0))
+    if got_def != exp_def:
+        raise ValueError(
+            f"w0 override for paradigm {spec.paradigm!r} has tree "
+            f"structure {got_def}, but the adapter's initial state is "
+            f"{exp_def}")
+    out = []
+    for i, (e, g) in enumerate(zip(exp_leaves, got_leaves)):
+        if tuple(g.shape) != tuple(e.shape):
+            raise ValueError(
+                f"w0 override leaf {i} has shape {tuple(g.shape)}, but "
+                f"paradigm {spec.paradigm!r} expects state of shape "
+                f"{tuple(e.shape)} (e.g. (K, M) stacked agent models "
+                f"for diffusion, (M,) for federated/sharded)")
+        out.append(g.astype(e.dtype))
+    return jax.tree.unflatten(exp_def, out)
 
 
 def run(spec: ScenarioSpec, *, w0=None) -> ScenarioResult:
     """Lower the spec through its paradigm adapter and run the scan.
 
-    Wall clock is end-to-end (first call per spec shape includes XLA
-    compilation).  Histories come back as numpy; ``loss`` is the
-    expected excess streaming MSE (msd + sigma_v^2) derived post-run.
+    The scan program is AOT-lowered and compiled first (``compile_s``),
+    then executed (``wall_clock_s``) -- steady wall clock never includes
+    XLA compilation.  Histories come back as numpy; ``loss`` semantics
+    are paradigm-owned (the linear adapters derive the expected excess
+    streaming MSE msd + sigma_v^2; the substrate reports real training
+    loss).  ``w0`` overrides the adapter's initial state after
+    shape/structure validation.
     """
+    from repro.kernels import ops  # deferred: keep import light
     adapter = registry.get_paradigm(spec.paradigm)
-    state0, step_fn = adapter(spec)
+    low = registry.as_lowering(adapter(spec))
+    state0 = low.state0
     if w0 is not None:
-        state0 = w0
+        state0 = _validated_override(state0, w0, spec)
     key = jax.random.key(spec.seed)
+
+    def _scan(s0, k):
+        return scan_loop(low.step_fn, s0, k, spec.num_steps)
+
     t0 = time.perf_counter()
-    final_state, hist = scan_loop(step_fn, state0, key, spec.num_steps)
+    with ops.record_workloads() as records:
+        compiled = jax.jit(_scan).lower(state0, key).compile()
+    compile_s = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    final_state, hist = compiled(state0, key)
     hist = jax.block_until_ready(hist)
     wall = time.perf_counter() - t0
+
     history = {name: np.asarray(h) for name, h in hist.items()}
-    history["loss"] = history["msd"] + spec.noise_var
+    if low.finalize is not None:
+        history = low.finalize(history)
+    else:
+        # linear-model default: expected excess streaming MSE
+        history["loss"] = history["msd"] + spec.noise_var
+    level = low.breakdown_level if low.breakdown_level is not None \
+        else metrics.breakdown_threshold(spec)
     return ScenarioResult(
         spec=spec,
         history=history,
-        summary=metrics.attack_summary(history["msd"]),
+        summary=metrics.attack_summary(history["msd"],
+                                       breakdown_level=level),
         wall_clock_s=wall,
-        launch_audit=_launch_audit(spec),
+        compile_s=compile_s,
+        launch_audit=_audit_from_records(records),
         final_state=final_state,
     )

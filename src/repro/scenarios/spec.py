@@ -8,9 +8,10 @@ field is hashable (kwargs travel as ``(key, value)`` tuples) so specs
 can key caches and parametrize tests directly.
 
 ``ScenarioResult`` is the uniform output: per-step metric histories,
-attack-success summary, wall clock, and -- for pallas-backend runs --
-the ``mm_aggregate.launch_plan`` audit of the kernel launch the run
-used.
+attack-success summary, timing (``compile_s`` for XLA lower+compile,
+``wall_clock_s`` for the steady compiled run), and -- for pallas-backend
+runs -- the ``mm_aggregate.launch_plan`` audit of the kernel launches
+the run actually used.
 """
 
 from __future__ import annotations
@@ -23,12 +24,20 @@ import numpy as np
 from repro.core import aggregators, attacks, graph
 from repro.scenarios import registry
 
-PARADIGMS = ("federated", "diffusion", "sharded")
+PARADIGMS = ("federated", "diffusion", "sharded", "substrate")
 BACKENDS = ("pallas", "jnp")
 DATA_SPLITS = ("iid", "dirichlet")
 
 # names the engine backend applies to (the paper's MM/Tukey estimator)
 MM_AGGREGATORS = ("mm_tukey", "ref", "mm_pallas")
+
+# the linear streaming-LSQ substrate (the paper's own Sec. 4 problem,
+# run through the LM-substrate machinery instead of the analytic loop)
+LSQ_SUBSTRATE = "paper_lsq"
+
+# aggregators the substrate's stacked-gradient train step supports
+# (launch.steps.aggregate_stack methods: mean + the MM family)
+SUBSTRATE_AGGREGATORS = ("mean",) + MM_AGGREGATORS
 
 
 @dataclasses.dataclass(frozen=True)
@@ -77,8 +86,14 @@ class ScenarioSpec:
     seed: int = 0
 
     # adapter-specific extras, e.g. (("collective", "rs_mm"),) for the
-    # sharded paradigm's real shard_map lowering
+    # sharded paradigm's real shard_map lowering, or
+    # (("batch_per_agent", 2), ("seq_len", 16)) for the substrate
     paradigm_kwargs: tuple = ()
+
+    # substrate paradigm only: which model the scenario trains --
+    # "paper_lsq" (the linear streaming-LSQ problem) or any
+    # configs.ARCH_ALIASES name (its reduced smoke_config is built)
+    model_config: str = ""
 
     def __post_init__(self):
         known = set(PARADIGMS) | set(registry.paradigm_names())
@@ -117,6 +132,29 @@ class ScenarioSpec:
             raise ValueError(
                 f"num_malicious must be in [0, {self.num_agents}), "
                 f"got {self.num_malicious}")
+        if self.paradigm == "substrate":
+            if not self.model_config:
+                raise ValueError(
+                    "substrate scenarios need model_config=... "
+                    f"({LSQ_SUBSTRATE!r} or a configs arch name)")
+            if self.model_config != LSQ_SUBSTRATE:
+                from repro.configs import resolve_arch  # deferred
+                resolve_arch(self.model_config)   # raises on unknown names
+            if self.aggregator not in SUBSTRATE_AGGREGATORS:
+                raise ValueError(
+                    "substrate aggregation runs through "
+                    "launch.steps.aggregate_stack, which supports "
+                    f"{SUBSTRATE_AGGREGATORS}; got {self.aggregator!r}")
+            if self.data != "iid" and self.model_config != LSQ_SUBSTRATE:
+                raise ValueError(
+                    "LM-substrate token batches are iid; "
+                    f"data={self.data!r} is only modeled for "
+                    f"model_config={LSQ_SUBSTRATE!r} (Dirichlet input "
+                    "covariances have no token-stream counterpart yet)")
+        elif self.model_config:
+            raise ValueError(
+                "model_config is a substrate-only field "
+                f"(paradigm is {self.paradigm!r})")
 
     # -- derived pieces ----------------------------------------------------
 
@@ -127,14 +165,17 @@ class ScenarioSpec:
         construction, whatever the field says."""
         if self.paradigm == "federated":
             return "star"
-        if self.paradigm == "sharded":
+        if self.paradigm in ("sharded", "substrate"):
             return "fully_connected"
         return self.topology
 
     def label(self) -> str:
         if self.name:
             return self.name
-        return (f"{self.paradigm}/{self.effective_topology()}/{self.aggregator}"
+        paradigm = self.paradigm
+        if self.paradigm == "substrate":
+            paradigm = f"substrate[{self.model_config}]"
+        return (f"{paradigm}/{self.effective_topology()}/{self.aggregator}"
                 f"-{self.backend}/{self.attack}x{self.num_malicious}"
                 f"/{self.data}/K{self.num_agents}_M{self.dim}"
                 f"_T{self.num_steps}_s{self.seed}")
@@ -171,14 +212,21 @@ class ScenarioSpec:
 @dataclasses.dataclass
 class ScenarioResult:
     """Uniform result of ``runner.run``: per-step histories (numpy), an
-    attack-success summary, wall clock, and the pallas launch audit."""
+    attack-success summary, timing, and the pallas launch audit.
+
+    Timing is split: ``compile_s`` is the AOT lower+compile cost of the
+    run's scan program, ``wall_clock_s`` the steady execution of the
+    already-compiled program -- the two are measured separately so
+    BENCH_scenarios.json rows never conflate XLA compilation with the
+    run itself."""
 
     spec: ScenarioSpec
     history: Dict[str, np.ndarray]     # msd / loss / consensus, (num_steps,)
     summary: Dict[str, Any]            # steady_msd / peak_msd / broke_down
-    wall_clock_s: float
+    wall_clock_s: float                # steady run, excludes compilation
     launch_audit: Optional[dict]       # mm_aggregate.launch_plan (pallas)
     final_state: Any                   # (M,) server model or (K, M) stack
+    compile_s: float = 0.0             # AOT lower + compile of the scan
 
     @property
     def final_msd(self) -> float:
@@ -209,6 +257,8 @@ class ScenarioResult:
             "num_steps": s.num_steps,
             "seed": s.seed,
             "wall_clock_s": round(self.wall_clock_s, 4),
+            "compile_s": round(self.compile_s, 4),
+            "model_config": s.model_config or None,
             "final_msd": num(self.final_msd),
             "steady_msd": num(self.summary["steady_msd"]),
             "broke_down": self.summary["broke_down"],

@@ -1,0 +1,242 @@
+"""The ``substrate`` paradigm: a ScenarioSpec drives the real training
+stack (``launch.steps``' robust aggregation path) instead of the
+analytic linear loop.
+
+``ScenarioSpec(paradigm="substrate", model_config=...)`` builds the
+model and optimizer from ``configs/`` and scans the *same* Mode-A train
+step the ``launch.train`` entry point runs -- per-agent batch shards,
+vmapped per-agent gradients, byzantine masks/schedules, and the shared
+aggregation resolution (``aggregate_stack`` -> ``engine_aggregator`` ->
+``kernels.ops``; ``backend='pallas'`` selects the fused kernel exactly
+like ``ParallelConfig.use_kernel``).  Parity with the one-shot
+``launch.steps`` path is bit-for-bit: the scan body IS the step that
+``make_train_step_gspmd`` returns (tests/test_scenario_substrate.py).
+
+Two substrate models:
+
+  ``model_config="paper_lsq"``
+      The paper's Sec. 4 streaming least-squares problem run as a
+      *trained model* (params {"w"}, per-agent sample losses, the LMS
+      gradient) through the same stacked-gradient aggregation the train
+      steps use -- connecting the analytic scenario family to the
+      training substrate on the exact problem both share.  Plain SGD
+      with a constant schedule reproduces the paper's fixed-mu updates.
+
+  ``model_config=<configs arch name>``  (e.g. "qwen3-0.6b")
+      The arch's reduced ``smoke_config`` transformer trained on
+      synthetic token streams: the global batch is sharded into
+      ``num_agents`` per-agent shards and every update is one robustly
+      aggregated step of ``launch.steps.make_train_step_gspmd`` (with
+      ``k_agents=spec.num_agents``, so K aggregation agents run on
+      however many devices exist).
+
+Metric semantics (the uniform history dict):
+
+  loss       -- real mean training loss across agents (tokens for the
+                LM, squared residuals for paper_lsq); there is no
+                analytic MSD, so ``finalize`` mirrors loss into ``msd``
+                and attack summaries run on training loss with a
+                loss-scale breakdown level.
+  consensus  -- benign agents' pre-aggregation gradient disagreement
+                (``launch.steps.grad_consensus``): a single shared model
+                has no per-agent parameter spread, so the spread of the
+                per-agent updates the aggregator has to reconcile is the
+                substrate's consensus quantity.
+
+``paradigm_kwargs`` (all optional, (key, value) tuples):
+  batch_per_agent (2)   sequences per agent per step
+  seq_len (16)          training sequence length
+  microbatches (1)      gradient-accumulation inside the step
+  aggregation ("rs_mm") stack method for the MM family: rs_mm | gather_mm
+  optimizer             "adam" (LM default) | "sgd" (paper_lsq default)
+                        | "momentum"
+  schedule              "cosine" (LM default) | "constant" (lsq default)
+  warmup_steps          LM default min(100, num_steps // 10 + 1)
+  num_layers / d_model  LM model-shape overrides (launch.train's
+                        --layers/--d-model, applied the same way)
+  model_parallel        mesh model-axis size (launch.train's
+                        --model-parallel)
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.data import synthetic
+from repro.launch import steps
+from repro.launch.mesh import make_host_mesh
+from repro.models import model as M
+from repro.optim import optimizers
+from repro.scenarios import registry
+from repro.scenarios.spec import LSQ_SUBSTRATE, ScenarioSpec
+
+DEFAULT_BATCH_PER_AGENT = 2
+DEFAULT_SEQ_LEN = 16
+
+
+def _pk(spec: ScenarioSpec) -> dict:
+    return dict(spec.paradigm_kwargs)
+
+
+def _opt_config(spec: ScenarioSpec, *, lsq: bool) -> optimizers.OptimizerConfig:
+    pk = _pk(spec)
+    if lsq:
+        # the paper's update: w <- w - mu * aggregate(grads), exactly
+        name, sched, warmup, clip = "sgd", "constant", 0, 0.0
+    else:
+        name, sched = "adam", "cosine"
+        warmup = min(100, spec.num_steps // 10 + 1)
+        clip = 1.0
+    return optimizers.OptimizerConfig(
+        name=pk.get("optimizer", name),
+        learning_rate=spec.step_size,
+        warmup_steps=int(pk.get("warmup_steps", warmup)),
+        total_steps=spec.num_steps,
+        grad_clip=float(pk.get("grad_clip", clip)),
+        schedule_kind=pk.get("schedule", sched),
+    )
+
+
+def _agg_num_iters(spec: ScenarioSpec) -> int:
+    return int(dict(spec.agg_kwargs).get("num_iters", 10))
+
+
+def build_lm_components(spec: ScenarioSpec):
+    """Everything the LM substrate scan shares with ``launch.train``'s
+    path: (model_cfg, par, opt_cfg, mesh, byzantine, state0, batch_fn).
+    Exposed so the parity tests drive ``steps.make_train_step_gspmd``
+    with the identical configuration and inputs."""
+    import dataclasses
+
+    pk = _pk(spec)
+    model_cfg = configs.load_smoke(spec.model_config)
+    # model-shape overrides, applied exactly as launch.train's
+    # --layers / --d-model flags apply them
+    if pk.get("num_layers"):
+        model_cfg = dataclasses.replace(model_cfg,
+                                        num_layers=int(pk["num_layers"]))
+    if pk.get("d_model"):
+        d_model = int(pk["d_model"])
+        scale = d_model // model_cfg.d_model
+        model_cfg = dataclasses.replace(
+            model_cfg, d_model=d_model,
+            d_ff=model_cfg.d_ff * max(scale, 1))
+    mesh = make_host_mesh(model=int(pk.get("model_parallel", 1)))
+    method = "mean" if spec.aggregator == "mean" \
+        else pk.get("aggregation", "rs_mm")
+    par = configs.ParallelConfig(
+        fsdp=False,
+        microbatches=int(pk.get("microbatches", 1)),
+        aggregation=method,
+        use_kernel=(spec.backend == "pallas"),
+        agg_num_iters=_agg_num_iters(spec),
+    )
+    opt_cfg = _opt_config(spec, lsq=False)
+    byz = spec.byzantine()
+    params0 = M.init_model(jax.random.key(spec.data_seed), model_cfg)
+    state0 = (params0, optimizers.init(opt_cfg, params0))
+
+    b = spec.num_agents * int(pk.get("batch_per_agent",
+                                     DEFAULT_BATCH_PER_AGENT))
+    seq = int(pk.get("seq_len", DEFAULT_SEQ_LEN))
+
+    def batch_fn(key):
+        """Jit-safe per-step batch in launch.train's format: the scan
+        key IS the batch key, so tests can regenerate any step's batch."""
+        batch = synthetic.make_lm_batch(key, b, seq, model_cfg.vocab_size)
+        if model_cfg.arch_type == "vlm":
+            p = min(model_cfg.num_prefix_tokens, seq // 2)
+            batch["prefix"] = jnp.zeros(
+                (b, p, model_cfg.d_model), jnp.dtype(model_cfg.act_dtype))
+        if model_cfg.arch_type == "audio":
+            batch["frames"] = 0.02 * jax.random.normal(
+                jax.random.fold_in(key, 1),
+                (b, model_cfg.num_prefix_tokens, model_cfg.d_model),
+                jnp.dtype(model_cfg.act_dtype))
+        return batch
+
+    return model_cfg, par, opt_cfg, mesh, byz, state0, batch_fn
+
+
+def _lm_pieces(spec: ScenarioSpec) -> Tuple:
+    model_cfg, par, opt_cfg, mesh, byz, state0, batch_fn = \
+        build_lm_components(spec)
+    step, _ = steps.make_train_step_gspmd(
+        model_cfg, par, opt_cfg, mesh, byz, k_agents=spec.num_agents,
+        consensus_metric=True)
+
+    def scan_step(state, key, i):
+        del i  # the byzantine schedule keys off opt_state.step inside
+        params, opt_state = state
+        params, opt_state, m = step(params, opt_state, batch_fn(key))
+        return (params, opt_state), {"loss": m["loss"],
+                                     "consensus": m["consensus"]}
+
+    # a broken-down LM run blows past the uniform-logits plateau ln(V)
+    level = 5.0 * float(np.log(model_cfg.padded_vocab))
+    return state0, scan_step, level
+
+
+def _lsq_pieces(spec: ScenarioSpec) -> Tuple:
+    problem = synthetic.LinearModelProblem(
+        dim=spec.dim, noise_var=spec.noise_var, seed=spec.data_seed)
+    loss_grad = synthetic.make_stacked_loss_grad_fn(
+        problem, spec.num_agents, data=spec.data,
+        alpha=spec.dirichlet_alpha, seed=spec.data_seed)
+    opt_cfg = _opt_config(spec, lsq=True)
+    byz = spec.byzantine()
+    k, num_iters = spec.num_agents, _agg_num_iters(spec)
+    use_kernel = spec.backend == "pallas"
+    mean_agg = spec.aggregator == "mean"
+    params0 = {"w": jnp.zeros((spec.dim,), jnp.float32)}
+    state0 = (params0, optimizers.init(opt_cfg, params0))
+
+    def scan_step(state, key, i):
+        params, opt_state = state
+        g_key, a_key = jax.random.split(key)
+        w_stack = jnp.broadcast_to(params["w"], (k,) + params["w"].shape)
+        losses, g = loss_grad(w_stack, g_key)
+        grads = byz.apply_tree({"w": g}, a_key, i)
+        benign = ~byz.malicious_mask(k, i)
+        if mean_agg:
+            est = jnp.mean(grads["w"].astype(jnp.float32), axis=0)
+        else:
+            # the SAME aggregation resolution the train steps use
+            est = steps._mm_axis0(grads["w"].astype(jnp.float32),
+                                  num_iters, use_kernel)
+        params, opt_state = optimizers.update(
+            opt_cfg, params, {"w": est}, opt_state)
+        return (params, opt_state), {
+            "loss": jnp.mean(losses),
+            "consensus": steps.grad_consensus(grads, benign)}
+
+    # loss ~ 0.5 * msd-projection + sigma_v^2 / 2: the linear breakdown
+    # scale shifted by the irreducible noise floor
+    from repro.scenarios import metrics
+    level = metrics.breakdown_threshold(spec) + spec.noise_var
+    return state0, scan_step, level
+
+
+def _finalize(history: dict) -> dict:
+    """Substrate metric semantics: training loss IS the tracked error
+    signal -- mirror it into ``msd`` so summaries and BENCH rows stay
+    uniform across paradigms."""
+    history = dict(history)
+    history["msd"] = np.array(history["loss"], copy=True)
+    return history
+
+
+def lower(spec: ScenarioSpec) -> registry.Lowering:
+    """The substrate paradigm adapter (registered lazily by the runner
+    so importing ``repro.scenarios`` does not pull the training stack)."""
+    if spec.model_config == LSQ_SUBSTRATE:
+        state0, scan_step, level = _lsq_pieces(spec)
+    else:
+        state0, scan_step, level = _lm_pieces(spec)
+    return registry.Lowering(state0=state0, step_fn=scan_step,
+                             finalize=_finalize, breakdown_level=level)
