@@ -8,12 +8,22 @@ including two structural audits:
     pallas_call, not one per leaf;
   * traffic audit: at fixed tile sizes the batched kernel fetches the
     SAME number of input blocks (and bytes) from HBM for every N --
-    the one-residency contract.  The pre-batching kernel streamed the
-    update matrix once per weight column (N x the bytes).
+    the one-residency contract, audited for BOTH kernel paths (the
+    two-pass audit additionally pins modeled VMEM residency <= budget
+    and total modeled traffic <= 2x the single-pass model).  The
+    pre-batching kernel streamed the update matrix once per weight
+    column (N x the bytes).
+
+Also included: large-cohort rows timing the two-pass K-major kernel
+(K >= 256, where the single-pass VMEM plan overflows) and an
+IRLS-depth sweep (num_iters in {3, 5, 10} at fixed K, M) recording
+us_per_call and MSD against a converged (T=50) oracle, so the default
+T=10 is justified by data rather than convention.
 
 ``--json PATH`` writes the rows + audits as BENCH_agg.json so the perf
 trajectory is tracked across PRs; ``--smoke`` shrinks shapes/reps for
-the ci.sh invocation.
+the ci.sh invocation.  Any non-finite kernel output aborts with a
+non-zero exit.
 """
 
 from __future__ import annotations
@@ -25,12 +35,17 @@ import time
 import jax
 import jax.numpy as jnp
 
+from repro import compat
 from repro.core import aggregators
 from repro.kernels import mm_aggregate as mk
-from repro.kernels import ops
+from repro.kernels import ops, ref
 
 SHAPES = ((16, 1 << 16), (32, 1 << 18))
 SMOKE_SHAPES = ((8, 1 << 12),)
+# two-pass territory: meshes past the single-pass VMEM sweet spot
+LARGE_K_SHAPES = ((256, 1 << 14), (1024, 1 << 13))
+SMOKE_LARGE_K_SHAPES = ((256, 1 << 12),)
+IRLS_DEPTHS = (3, 5, 10)
 AGGS = ("mean", "median", "trimmed_mean", "geometric_median", "krum",
         "m_huber", "mm_tukey")
 SMOKE_AGGS = ("mean", "median", "mm_tukey")
@@ -78,28 +93,55 @@ def _time(fn, *args, reps=5):
     return (time.perf_counter() - t0) / reps * 1e6
 
 
-def traffic_audit(k: int, m: int, ns=(1, 8, 32), block_m: int = 256) -> dict:
+def traffic_audit(k: int, m: int, ns=(1, 8, 32), block_m: int = 256,
+                  path: str = "single") -> dict:
     """One-residency audit via the kernel's own launch plan: input-block
-    fetches and bytes must be N-independent at fixed tile sizes."""
-    plans = {n: mk.launch_plan(k, m, n, block_m=block_m) for n in ns}
+    fetches and bytes must be N-independent at fixed tile sizes -- for
+    either kernel path.  The two-pass audit additionally pins the
+    modeled VMEM residency to the budget and the total modeled traffic
+    to <= 2x the single-pass model at equal (K, M, N) (both paths
+    stream the update tile once; the per-block stats stay in VMEM)."""
+    plans = {n: mk.launch_plan(k, m, n, block_m=block_m, path=path)
+             for n in ns}
     fetches = {n: p.input_block_fetches for n, p in plans.items()}
     in_bytes = {n: p.input_bytes for n, p in plans.items()}
     ok = len(set(fetches.values())) == 1 and len(set(in_bytes.values())) == 1
     assert ok, f"input stream depends on N: {fetches} / {in_bytes}"
     n_max = max(ns)
-    return {
+    audit = {
         "shape": f"K{k}_M{m}",
         "block_m": block_m,
+        "path": path,
         "input_block_fetches_by_n": {str(n): fetches[n] for n in ns},
         "input_bytes_by_n": {str(n): in_bytes[n] for n in ns},
         "n_independent": ok,
+        "vmem_bytes": max(p.vmem_bytes for p in plans.values()),
         # what the pre-batching (N, M, K) grid would have streamed at N_max
         "pre_fix_input_bytes_at_n_max": n_max * in_bytes[n_max],
         "traffic_reduction_at_n_max": n_max,
     }
+    if path == "two_pass":
+        ratio = max(
+            plans[n].total_bytes
+            / mk.launch_plan(k, m, n, block_m=block_m,
+                             path="single").total_bytes
+            for n in ns)
+        assert ratio <= 2.0, f"two-pass traffic {ratio}x single-pass"
+        assert audit["vmem_bytes"] <= mk.VMEM_BUDGET_BYTES, \
+            f"two-pass VMEM model over budget: {audit['vmem_bytes']}"
+        audit["total_bytes_vs_single_pass"] = round(ratio, 4)
+        audit["single_pass_vmem_overflow"] = bool(
+            mk.single_pass_vmem_bytes(k, max(ns), block_m)
+            > mk.VMEM_BUDGET_BYTES)
+    return audit
 
 
-def main(smoke: bool = False) -> tuple[list[tuple], list[dict]]:
+def _assert_finite(name: str, out) -> None:
+    for leaf in jax.tree.leaves(out):
+        assert bool(jnp.isfinite(leaf).all()), f"non-finite output: {name}"
+
+
+def main(smoke: bool = False) -> tuple[list[tuple], list[dict], list[dict]]:
     shapes = SMOKE_SHAPES if smoke else SHAPES
     aggs = SMOKE_AGGS if smoke else AGGS
     reps = 2 if smoke else 5
@@ -143,6 +185,43 @@ def main(smoke: bool = False) -> tuple[list[tuple], list[dict]]:
                          pn.input_bytes + pn.weight_bytes + pn.output_bytes,
                          launches))
         audits.append(traffic_audit(k, m))
+
+    # large-cohort rows: the two-pass K-major kernel on meshes where
+    # the single-pass VMEM plan overflows (the K=256 row is the ci.sh
+    # smoke gate; non-finite output aborts the benchmark).  The audit
+    # pins N-independent input bytes, modeled VMEM <= budget, and total
+    # modeled traffic <= 2x the single-pass model for the same shape.
+    for k, m in (SMOKE_LARGE_K_SHAPES if smoke else LARGE_K_SHAPES):
+        x = jax.random.normal(jax.random.key(2), (k, m))
+        x = x.at[-k // 4:].add(100.0)
+        plan = mk.launch_plan(k, m, 1, path="two_pass")
+        f2 = jax.jit(lambda v: ops.mm_aggregate(v, interpret=True,
+                                                path="two_pass"))
+        _assert_finite(f"mm_pallas_two_pass/K{k}_M{m}", f2(x))
+        us = _time(f2, x, reps=reps)
+        rows.append((f"agg/mm_pallas_two_pass/K{k}_M{m}", us, m / us,
+                     plan.total_bytes, 1))
+        audits.append(traffic_audit(k, m, block_m=128, path="two_pass"))
+
+    # IRLS-depth sweep: us/call and MSD against a converged (T=50) jnp
+    # oracle at fixed (K, M) -- the data behind the default T=10.
+    k_i, m_i = (8, 1 << 12) if smoke else (32, 1 << 16)
+    x_i = jax.random.normal(jax.random.key(3), (k_i, m_i))
+    x_i = x_i.at[-k_i // 4:].add(100.0)
+    converged = ref.mm_aggregate_ref(x_i, num_iters=50)
+    irls_rows = []
+    for t in IRLS_DEPTHS:
+        ft = jax.jit(lambda v, _t=t: ops.mm_aggregate(
+            v, interpret=True, num_iters=_t))
+        out = ft(x_i)
+        _assert_finite(f"irls_depth/T{t}", out)
+        us = _time(ft, x_i, reps=reps)
+        irls_rows.append({
+            "num_iters": t,
+            "shape": f"K{k_i}_M{m_i}",
+            "us_per_call": round(us, 2),
+            "msd_vs_oracle": float(jnp.mean((out - converged) ** 2)),
+        })
 
     # scenario-runner path: one declarative spec -> a full scan'd run
     # per paradigm.  The runner AOT-compiles the scan before timing it,
@@ -211,10 +290,10 @@ def main(smoke: bool = False) -> tuple[list[tuple], list[dict]]:
                      f"_M{m_total}_launches{launches}", us, m_total / us,
                      pt.input_bytes + pt.weight_bytes + pt.output_bytes,
                      launches))
-    return rows, audits
+    return rows, audits, irls_rows
 
 
-def write_json(path: str, rows, audits, smoke: bool) -> None:
+def write_json(path: str, rows, audits, irls_rows, smoke: bool) -> None:
     payload = {
         "bench": "agg",
         "mode": "smoke" if smoke else "full",
@@ -226,6 +305,7 @@ def write_json(path: str, rows, audits, smoke: bool) -> None:
             for name, us, thru, bytes_, calls in rows
         ],
         "traffic_audit": audits,
+        "irls_sweep": irls_rows,
     }
     with open(path, "w") as f:
         json.dump(payload, f, indent=2)
@@ -239,13 +319,17 @@ if __name__ == "__main__":
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="write BENCH_agg.json-style output")
     ns = ap.parse_args()
-    rows_, audits_ = main(smoke=ns.smoke)
+    compat.enable_persistent_compilation_cache()
+    rows_, audits_, irls_ = main(smoke=ns.smoke)
     for name, us, thru, bytes_, calls in rows_:
         print(f"{name},{us:.2f},{thru:.6g}")
     for a_ in audits_:
-        print(f"audit/{a_['shape']}: fetches_by_n="
+        print(f"audit/{a_['shape']}[{a_['path']}]: fetches_by_n="
               f"{a_['input_block_fetches_by_n']} n_independent="
               f"{a_['n_independent']}")
+    for r_ in irls_:
+        print(f"irls/T{r_['num_iters']}: {r_['us_per_call']}us "
+              f"msd_vs_oracle={r_['msd_vs_oracle']:.3g}")
     if ns.json:
-        write_json(ns.json, rows_, audits_, ns.smoke)
+        write_json(ns.json, rows_, audits_, irls_, ns.smoke)
         print(f"wrote {ns.json}")

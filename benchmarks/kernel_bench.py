@@ -72,6 +72,18 @@ def main() -> list[tuple]:
                                                         interpret=True)), x)
             rows.append((f"kernel/mm_pallas_batched/K{k}_M{m}_N{n}"
                          f"_traffic_x{pre / post:.1f}", t_b, post))
+    # large-cohort single- vs two-pass crossover: same one-residency
+    # traffic model (the two-pass stat intermediates never touch HBM),
+    # wall clock decides -- the sort work drops from one next_pow2(K)
+    # network to K/bk blocks of bk plus a tiny combine.
+    for k, m in ((256, 1 << 13), (512, 1 << 12)):
+        x = jax.random.normal(jax.random.key(2), (k, m))
+        for path in ("single", "two_pass"):
+            t_p = _time(jax.jit(
+                lambda v, _p=path: ops.mm_aggregate(v, interpret=True,
+                                                    path=_p)), x)
+            rows.append((f"kernel/mm_pallas_{path}/K{k}_M{m}", t_p,
+                         modeled_hbm_bytes(k, m, True)))
     return rows
 
 

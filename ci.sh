@@ -2,21 +2,60 @@
 # Tier-1 verification: the whole suite, fail-fast, quiet -- then a
 # smoke run of the aggregation benchmark that emits BENCH_agg.json
 # (shape -> µs/call + modeled HBM bytes + pallas_call count, plus the
-# one-residency traffic audit) so the perf trajectory is tracked from
-# every CI run onward.
+# one-residency traffic audit for BOTH kernel paths and the IRLS-depth
+# sweep) so the perf trajectory is tracked from every CI run onward.
 # (pyproject's pytest pythonpath handles src/ resolution; the explicit
 # PYTHONPATH export keeps the command working for tools that bypass
 # pytest's ini, e.g. the subprocess-based multi-device tests.)
 set -euo pipefail
 cd "$(dirname "$0")"
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+# persistent XLA compile cache (env-guarded, REPRO_TUNING_CACHE-style):
+# the benchmark/sweep processes below re-use each other's compiles, and
+# CI re-runs amortize them across invocations.  Pre-set values win.
+export JAX_COMPILATION_CACHE_DIR="${JAX_COMPILATION_CACHE_DIR:-.jax_compile_cache}"
 python -m pytest -x -q "$@"
+# agg benchmark smoke: includes the large-K two-pass row (K=256) and
+# exits non-zero on any non-finite kernel output.
 python benchmarks/agg_bench.py --smoke --json BENCH_agg.json
+# the emitted traffic audit must cover BOTH kernel paths, with the
+# two-pass audit N-independent and within the modeled VMEM budget.
+python - <<'PY'
+import json
+b = json.load(open("BENCH_agg.json"))
+paths = {a["path"] for a in b["traffic_audit"]}
+assert paths >= {"single", "two_pass"}, f"audit paths incomplete: {paths}"
+assert all(a["n_independent"] for a in b["traffic_audit"]), "N-dependent input stream"
+assert any(r["name"].startswith("agg/mm_pallas_two_pass/K256")
+           for r in b["rows"]), "missing K=256 two-pass smoke row"
+assert b["irls_sweep"], "missing IRLS-depth sweep"
+print("BENCH_agg.json audit ok:", sorted(paths))
+PY
 # scenario smoke sweep: 3 tiny specs covering the three linear paradigms
 # on the pallas backend (each result carries the kernel launch audit);
 # exits non-zero on any non-finite metric and emits per-spec rows with
 # compile_s (XLA lower+compile) and wall_clock_s (steady run) separated.
 python examples/scenario_sweep.py --smoke --json BENCH_scenarios.json
+# large-cohort smoke family: K=1024 federated at 0.5 participation runs
+# a 512-agent aggregation through the two-pass kernel end to end (the
+# single-pass plan would overflow the VMEM budget); the audit rides on
+# the BENCH rows and is asserted below.
+python examples/scenario_sweep.py --family large_cohort --smoke \
+    --json BENCH_large_cohort.json
+python - <<'PY'
+import json
+rows = json.load(open("BENCH_large_cohort.json"))["rows"]
+from repro.kernels import mm_aggregate as mk
+two = [r for r in rows if (r["launch_audit"] or {}).get("path") == "two_pass"]
+assert two, "no two-pass scenario in the large-cohort smoke family"
+for r in two:
+    a = r["launch_audit"]
+    assert a["vmem_bytes"] <= mk.VMEM_BUDGET_BYTES, (r["name"], a["vmem_bytes"])
+    assert mk.single_pass_vmem_bytes(a["k_pad"], a["n_out"], a["block_m"]) \
+        > mk.VMEM_BUDGET_BYTES, "two-pass engaged where single-pass fits"
+print(f"large-cohort audit ok: {len(two)} two-pass scenario(s), K="
+      f"{[r['launch_audit']['k_pad'] for r in two]}")
+PY
 # substrate smoke spec: one LM-substrate scenario driving launch.steps'
 # robust train step through the same runner (pallas backend -> per-layout
 # launch audit); the sweep exits non-zero on non-finite loss.

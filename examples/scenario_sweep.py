@@ -10,10 +10,18 @@ by the same ``scenarios.run`` harness.
   PYTHONPATH=src python examples/scenario_sweep.py \
       --paradigm substrate --smoke
 
+  # production cohort sizes: K in {128, 256, 1024}, low participation,
+  # pallas backend -- large meshes take the two-pass K-major kernel
+  PYTHONPATH=src python examples/scenario_sweep.py \
+      --family large_cohort --smoke
+
 ``--smoke`` shrinks the problem (tiny K/M, few steps) for CI; with no
 explicit matrix arguments it runs the CI preset: three pallas-backend
 specs covering the three linear paradigms, each carrying the
-``mm_aggregate.launch_plan`` audit.  ``--paradigm substrate`` trains
+``mm_aggregate.launch_plan`` audit (incl. the kernel path, modeled
+traffic and modeled VMEM residency).  When $JAX_COMPILATION_CACHE_DIR
+is set, jax's persistent compilation cache is enabled so repeated
+sweeps amortize XLA compiles across processes.  ``--paradigm substrate`` trains
 ``--model`` (default qwen3-0.6b smoke config; ``paper_lsq`` for the
 linear substrate) through the launch.steps aggregation path -- pallas
 backend by default so the per-layout launch audit is attached.  Exits
@@ -29,10 +37,22 @@ import argparse
 import json
 import sys
 
-from repro import scenarios
+from repro import compat, scenarios
 
 FULL = dict(num_agents=16, dim=10, num_steps=300, num_malicious=3)
 SMOKE = dict(num_agents=8, dim=8, num_steps=25, num_malicious=2)
+
+# large_cohort family: production-scale agent counts at low
+# participation, pallas backend -- the two-pass K-major kernel's home
+# turf.  The federated cohort (clients_per_round = participation * K)
+# is the kernel's K axis, so K=1024 @ 0.5 exercises a 512-agent
+# aggregation whose single-pass plan would overflow the VMEM budget;
+# dim=256 keeps the lane tile wide enough that the overflow is real.
+LARGE_COHORT_DIM = 256
+LARGE_COHORT_SMOKE = (("federated", 1024, 0.5), ("sharded", 256, 1.0))
+LARGE_COHORT_FULL = tuple(
+    [("federated", k, p) for k in (128, 256, 1024) for p in (0.1, 0.5)]
+    + [("sharded", 256, 1.0), ("sharded", 1024, 1.0)])
 
 # the substrate trains a real model per step; keep the grids tight
 SUBSTRATE_FULL = dict(num_agents=8, num_steps=20, num_malicious=2,
@@ -72,7 +92,26 @@ def _substrate_specs(ns) -> list:
     return specs
 
 
+def _large_cohort_specs(ns) -> list:
+    steps = ns.steps if ns.steps is not None else (3 if ns.smoke else 10)
+    combos = LARGE_COHORT_SMOKE if ns.smoke else LARGE_COHORT_FULL
+    specs = []
+    for paradigm, k, part in combos:
+        nmal = ns.malicious if ns.malicious is not None else k // 8
+        specs.append(scenarios.ScenarioSpec(
+            paradigm=paradigm, aggregator="mm_tukey",
+            backend=ns.backend or "pallas",
+            attack=(ns.attack or ["additive"])[0],
+            num_agents=k, dim=LARGE_COHORT_DIM, num_steps=steps,
+            num_malicious=nmal,
+            participation=part if paradigm == "federated" else 1.0,
+            data=ns.data, dirichlet_alpha=ns.alpha, seed=ns.seeds[0]))
+    return specs
+
+
 def build_specs(ns) -> list:
+    if ns.family == "large_cohort":
+        return _large_cohort_specs(ns)
     sizes = SMOKE if ns.smoke else FULL
     if ns.malicious is not None:
         sizes = {**sizes, "num_malicious": ns.malicious}
@@ -139,12 +178,23 @@ def main(argv=None) -> int:
     ap.add_argument("--seeds", nargs="+", type=int, default=[0])
     ap.add_argument("--malicious", type=int, default=None)
     ap.add_argument("--steps", type=int, default=None)
+    ap.add_argument("--family", default=None, choices=["large_cohort"],
+                    help="named scenario family: 'large_cohort' sweeps "
+                         "K in {128,256,1024} at low participation on "
+                         "the pallas backend (two-pass kernel territory)")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny K/M and few steps; with no matrix args, "
                          "the 3-spec all-paradigm CI preset (ci.sh)")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="write BENCH_scenarios.json-style output")
     ns = ap.parse_args(argv)
+
+    # env-guarded persistent XLA compile cache: sweep re-runs (and the
+    # other ci.sh benchmark processes) amortize compiles across
+    # processes the way REPRO_TUNING_CACHE amortizes block sweeps
+    cache_dir = compat.enable_persistent_compilation_cache()
+    if cache_dir:
+        print(f"persistent compilation cache: {cache_dir}")
 
     specs = build_specs(ns)
     rows = []

@@ -11,6 +11,8 @@ module so a single interpreter can run either line.
 
 from __future__ import annotations
 
+import os
+
 import jax
 
 HAS_MODERN_SHARD_MAP = hasattr(jax, "shard_map")
@@ -22,6 +24,35 @@ HAS_ABSTRACT_MESH = hasattr(jax.sharding, "get_abstract_mesh")
 # constraints are memory optimizations that need the modern stack; on
 # the legacy API the callers fall back to identity wrappers.
 SUPPORTS_NESTED_MANUAL = HAS_MODERN_SHARD_MAP and HAS_ABSTRACT_MESH
+
+
+COMPILATION_CACHE_ENV = "JAX_COMPILATION_CACHE_DIR"
+
+
+def enable_persistent_compilation_cache():
+    """Env-guarded switch for jax's persistent (on-disk) compilation
+    cache, mirroring the ``REPRO_TUNING_CACHE`` pattern: when
+    ``$JAX_COMPILATION_CACHE_DIR`` names a directory, point jax's cache
+    there and drop the min-compile-time/min-entry-size thresholds so
+    even the small smoke-sweep programs persist -- repeated sweep /
+    benchmark processes then amortize XLA compiles across runs instead
+    of re-paying them per process.  Returns the cache dir, or None when
+    the env var is unset (no config is touched -- in-process behavior
+    is exactly as before).  Version-tolerant: unknown config names on
+    older jax lines are ignored.
+    """
+    path = os.environ.get(COMPILATION_CACHE_ENV)
+    if not path:
+        return None
+    for name, value in (
+            ("jax_compilation_cache_dir", path),
+            ("jax_persistent_cache_min_compile_time_secs", 0.0),
+            ("jax_persistent_cache_min_entry_size_bytes", 0)):
+        try:
+            jax.config.update(name, value)
+        except (AttributeError, KeyError, ValueError):  # pragma: no cover
+            pass    # older jax: best effort, never fatal
+    return path
 
 
 def make_mesh(axis_shapes, axis_names):

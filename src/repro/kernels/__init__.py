@@ -3,11 +3,17 @@
 mm_aggregate.py -- fused (weighted) median/MAD/Tukey-IRLS over (K, M)
                    tiles; ALL N neighborhood weight columns are batched
                    in the kernel body, so the update matrix is streamed
-                   from HBM exactly once per launch (one-residency)
+                   from HBM exactly once per launch (one-residency).
+                   Two lowerings share that geometry: the single-pass
+                   full-K-sort kernel (small meshes) and the two-pass
+                   K-major kernel (per-K-block stats + cross-block
+                   IRLS) for K >> 64; launch_plan models both and
+                   auto-selects (see docs/kernels.md)
 ops.py          -- AggregationEngine: the repo-wide aggregation entry
                    point (array / batched / whole-pytree single launch)
-tuning.py       -- block_m/block_k autotuner + heuristic; the engine
-                   consults its cache by default
+tuning.py       -- block_m/block_k/path autotuner + heuristic; the
+                   engine consults its cache (incl. the measured
+                   single<->two-pass crossover) by default
 ref.py          -- pure-jnp oracle (tests assert kernel == ref)
 """
 

@@ -51,6 +51,41 @@ benchmarks audit it.
 
 Block sizes default to ``kernels.tuning`` (cached autotuner winner, or
 a VMEM-budget heuristic when no measurement is cached).
+
+TWO-PASS K-MAJOR PATH (K >> 64).  The single-pass kernel's working set
+is dominated by the full-K sort networks: the weighted-median carry
+planes and the MAD deviation planes are (next_pow2(K), N, bm) f32, so
+large K (and K x N) overflows VMEM.  ``path="two_pass"`` keeps the SAME
+(M/bm, K/bk) grid and single input residency but replaces the full-K
+sorts with two passes *over the K axis*:
+
+  pass 1 (every K grid step): the streamed (bk, bm) block is sorted by
+      a bk-sized bitonic network (working set scales with bk, not K)
+      and per-block robust statistics -- block (weighted) median, block
+      MAD, block weight mass -- are emitted into a (K/bk, N, bm) VMEM
+      scratch intermediate, tiny relative to the update matrix and
+      never round-tripped through HBM (an HBM intermediate would break
+      the <= 2x traffic bound: 2 stat planes re-read cost
+      4*(K/bk)*N*M bytes against an N*M*itemsize output budget).
+  pass 2 (last K step): a mass-weighted median-of-medians/quantile
+      init plus a pooled (mass-weighted median) MAD scale, then the
+      Tukey IRLS refinement with cross-block accumulation -- the IRLS
+      numerator/denominator sums decompose exactly over K blocks, so
+      each iteration walks the resident (K_pad, bm) scratch block by
+      block with a bounded (bk, n_chunk, bm) working set.  Only the
+      init/scale are approximate (exact when K/bk == 1); the refinement
+      sums are exact.
+
+The N axis is additionally processed in ``n_chunk`` column chunks so
+the transient sort/IRLS planes are (bk, n_chunk, bm) instead of
+(K, N, bm) -- the single-pass VMEM blow-up never re-enters through N.
+Input block fetches/bytes are identical to the single-pass plan at
+equal tile sizes (one residency, N-free grid), so total modeled HBM
+traffic stays ~1x (bounded by 2x via K padding to bk multiples).
+``launch_plan`` models both paths (geometry, traffic, VMEM residency)
+and auto-selects: two-pass iff K > 64 and the single-pass VMEM model
+exceeds ``VMEM_BUDGET_BYTES``; a ``kernels.tuning`` cached winner (the
+measured single<->two-pass crossover) takes precedence.
 """
 
 from __future__ import annotations
@@ -69,6 +104,23 @@ from repro.core import location, mestimators
 DEFAULT_BLOCK_M = 512
 _SCALE_FLOOR = 1e-12
 _MAD_CONSISTENCY = 1.4826022185056018
+
+PATHS = ("single", "two_pass")
+# conservative per-core VMEM budget for the kernel working set (the
+# full VMEM is ~16 MB; leave room for double buffering + output).  The
+# single source of truth for the heuristic lane tile (kernels.tuning)
+# AND the single<->two-pass crossover (``auto_path``).
+VMEM_BUDGET_BYTES = 4 * 2 ** 20
+# the single-pass path is the measured default for small meshes; the
+# two-pass machinery only auto-engages beyond this agent count
+_TWO_PASS_MIN_K = 65
+# largest K block the two-pass path sorts in one network (bigger K is
+# split into multiple blocks -> approximate median-of-medians init)
+_MAX_BLOCK_K2 = 512
+# transient working-set budget for one (bk, n_chunk, bm) chunk
+_CHUNK_BUDGET_BYTES = 2 * 2 ** 20
+# trace-size guard: never split N into more than this many chunks
+_MAX_N_CHUNKS = 16
 
 
 def next_pow2(n: int) -> int:
@@ -153,18 +205,39 @@ def _median_rows(x_sorted: jnp.ndarray, k: int) -> jnp.ndarray:
     return 0.5 * (lo + hi)
 
 
-def _weighted_median_planes(xs: jnp.ndarray, ws: jnp.ndarray) -> jnp.ndarray:
-    """Weighted medians of an ascending-sorted tile, one per weight plane.
+def _wquantile_planes(xs: jnp.ndarray, ws: jnp.ndarray, half) -> jnp.ndarray:
+    """Weighted median crossings of an ascending-sorted tile.
 
-    xs is (P, bm) sorted values; ws is (P, N, bm) carried (normalized)
-    weight planes.  Per plane, select the first value whose cumulative
-    weight reaches 1/2.  Sentinel rows carry weight 0 and sort to the
-    end, so they are never selected.  Returns (N, bm).
+    ws is (P, N, bm) carried weight planes; xs is the matching sorted
+    values, (P, bm) (shared across planes) or (P, N, bm).  Per plane,
+    select the first value whose cumulative weight reaches ``half``
+    (a scalar, or an (N, bm) threshold -- e.g. half the plane's total
+    mass).  Sentinel rows carry weight 0 and sort to the end, so they
+    are never selected; an all-zero plane selects nothing and returns
+    0.  Returns (N, bm).
     """
     cw = jnp.cumsum(ws, axis=0)
     prev = jnp.concatenate([jnp.zeros_like(cw[:1]), cw[:-1]], axis=0)
-    sel = (cw >= 0.5) & (prev < 0.5)
-    return jnp.sum(jnp.where(sel, xs[:, None, :], 0.0), axis=0)
+    sel = (cw >= half) & (prev < half)
+    vals = xs if xs.ndim == ws.ndim else xs[:, None, :]
+    return jnp.sum(jnp.where(sel, vals, 0.0), axis=0)
+
+
+def _weighted_median_planes(xs: jnp.ndarray, ws: jnp.ndarray) -> jnp.ndarray:
+    """Weighted medians of an ascending-sorted tile, one per (globally
+    normalized) weight plane: the cumulative-weight-1/2 crossing."""
+    return _wquantile_planes(xs, ws, 0.5)
+
+
+def _rank_median_planes(xs_sorted: jnp.ndarray, cnt) -> jnp.ndarray:
+    """Midpoint median of the first ``cnt`` rows of an ascending-sorted
+    tile whose pad rows are +inf.  ``cnt`` may be a traced scalar (the
+    K block's valid-row count), so the two ranks are selected by mask
+    rather than static indexing.  (P, ...) -> (...)."""
+    io = jax.lax.broadcasted_iota(jnp.int32, xs_sorted.shape, 0)
+    lo = jnp.sum(jnp.where(io == (cnt - 1) // 2, xs_sorted, 0.0), axis=0)
+    hi = jnp.sum(jnp.where(io == cnt // 2, xs_sorted, 0.0), axis=0)
+    return 0.5 * (lo + hi)
 
 
 def _mm_kernel(x_ref, a_ref, o_ref, xs_ref, *, k: int, block_k: int,
@@ -230,6 +303,108 @@ def _mm_kernel(x_ref, a_ref, o_ref, xs_ref, *, k: int, block_k: int,
         o_ref[...] = mu.astype(o_ref.dtype)
 
 
+def _mm_two_pass_kernel(x_ref, a_ref, o_ref, xs_ref, med_ref, mad_ref, *,
+                        k: int, block_k: int, n_chunk: int, num_iters: int,
+                        c: float, weighted: bool):
+    """K-major two-pass kernel (see module docstring).
+
+    Same (M/bm, K_pad/bk) grid and one-residency streaming as the
+    single-pass kernel, but the sort networks are bk-sized: pass 1
+    computes per-K-block robust statistics into the (K/bk, N, bm) VMEM
+    scratch intermediates as each block streams in; pass 2 (last K
+    step) combines them into a median-of-medians init + pooled MAD
+    scale and runs the cross-block-accumulated Tukey IRLS over the
+    (K_pad, bm) residency.  The N axis is processed in ``n_chunk``
+    column chunks so every transient plane is (bk|KB, n_chunk, bm).
+    """
+    ki = pl.program_id(1)
+    bk = block_k
+    kb, n_out, bm = med_ref.shape
+
+    # ---- pass 1: per-block robust statistics (every K grid step) ----
+    xb = x_ref[...].astype(jnp.float32)                        # (bk, bm)
+    row = jax.lax.broadcasted_iota(jnp.int32, (bk, bm), 0) + ki * bk
+    valid = row < k
+    cnt = jnp.minimum(k - ki * bk, bk)        # valid rows, >= 1 (ceil grid)
+    xs_ref[pl.ds(ki * bk, bk), :] = jnp.where(valid, xb, 0.0)
+    xinf = jnp.where(valid, xb, jnp.inf)      # sort operand, pads last
+    a_blk = a_ref[pl.ds(ki * bk, bk), :].astype(jnp.float32)   # (bk, N)
+
+    for c0 in range(0, n_out, n_chunk):
+        nc = min(n_chunk, n_out - c0)
+        if weighted:
+            ac = a_blk[:, c0:c0 + nc]                          # (bk, nc)
+            planes = jnp.broadcast_to(ac[:, :, None], (bk, nc, bm))
+            xs, (ws,) = _bitonic_sort_rows(xinf, (planes,))
+            # block weighted median: crossing at half the BLOCK mass
+            half = 0.5 * jnp.sum(ws, axis=0)                   # (nc, bm)
+            med_c = _wquantile_planes(xs, ws, half)            # (nc, bm)
+        else:
+            xs, _ = _bitonic_sort_rows(xinf)
+            med_c = _rank_median_planes(xs, cnt)[None]         # (1, bm)
+        # block MAD: plain (rank) median of |x - med_n| over the block's
+        # valid rows, matching the oracle's unweighted MAD; +inf pads
+        # sort to the end and never enter the cnt ranks.
+        dev = jnp.abs(xs[:, None, :] - med_c[None]) \
+            if weighted else jnp.abs(xs - med_c)[:, None, :]
+        ds, _ = _bitonic_sort_rows(dev)
+        mad_c = _rank_median_planes(ds, cnt)                   # (nc, bm)
+        med_ref[pl.ds(ki, 1), c0:c0 + nc, :] = med_c[None]
+        mad_ref[pl.ds(ki, 1), c0:c0 + nc, :] = mad_c[None]
+
+    # ---- pass 2: combine + cross-block IRLS (last K step) ----
+    @pl.when(ki == pl.num_programs(1) - 1)
+    def _refine():
+        a = a_ref[...].astype(jnp.float32)                     # (K_pad, N)
+        mass = jnp.sum(a.reshape(kb, bk, n_out), axis=1)       # (KB, N)
+        meds = med_ref[...]                                    # (KB, N, bm)
+        mads = mad_ref[...]
+        kbp = next_pow2(kb)
+        if kbp != kb:      # top up the tiny combine sort, in registers
+            pad = jnp.full((kbp - kb, n_out, bm), jnp.inf, jnp.float32)
+            meds = jnp.concatenate([meds, pad], axis=0)
+            mads = jnp.concatenate([mads, pad], axis=0)
+            mass = jnp.concatenate(
+                [mass, jnp.zeros((kbp - kb, n_out), jnp.float32)], axis=0)
+        xsv = xs_ref[...]                    # (K_pad, bm), zeros on pads
+        c2 = jnp.float32(c * c)
+
+        for c0 in range(0, n_out, n_chunk):
+            nc = min(n_chunk, n_out - c0)
+            mass_c = jnp.broadcast_to(
+                mass[:, c0:c0 + nc, None], (kbp, nc, bm))
+            half = 0.5 * jnp.sum(mass_c, axis=0)               # (nc, bm)
+            # init: mass-weighted median of block medians; scale: pooled
+            # mass-weighted median of block MADs.  Exact when KB == 1.
+            ms, (mw,) = _bitonic_sort_rows(meds[:, c0:c0 + nc, :], (mass_c,))
+            mu0 = _wquantile_planes(ms, mw, half)
+            ss, (sw,) = _bitonic_sort_rows(mads[:, c0:c0 + nc, :], (mass_c,))
+            scale = jnp.maximum(
+                _MAD_CONSISTENCY * _wquantile_planes(ss, sw, half),
+                _SCALE_FLOOR)
+            ac = a[:, c0:c0 + nc]                              # (K_pad, nc)
+
+            def body(t, mu, _ac=ac, _scale=scale, _nc=nc):
+                # the IRLS num/den sums decompose exactly over K blocks:
+                # walk the residency block by block, (bk, nc, bm) live
+                def blk(b, acc):
+                    num, den = acc
+                    xb_b = jax.lax.dynamic_slice(xsv, (b * bk, 0), (bk, bm))
+                    a_b = jax.lax.dynamic_slice(_ac, (b * bk, 0), (bk, _nc))
+                    y = (xb_b[:, None, :] - mu[None]) / _scale[None]
+                    u = jnp.clip(1.0 - (y * y) / c2, 0.0, 1.0)
+                    w = a_b[:, :, None] * (u * u)              # a_k * b_k
+                    return (num + jnp.sum(w * xb_b[:, None, :], axis=0),
+                            den + jnp.sum(w, axis=0))
+                zero = jnp.zeros((_nc, bm), jnp.float32)
+                num, den = jax.lax.fori_loop(0, kb, blk, (zero, zero))
+                safe = den > _SCALE_FLOOR
+                return jnp.where(safe, num / jnp.where(safe, den, 1.0), mu)
+
+            mu = jax.lax.fori_loop(0, num_iters, body, mu0)
+            o_ref[c0:c0 + nc, :] = mu.astype(o_ref.dtype)
+
+
 class LaunchPlan(NamedTuple):
     """Static geometry + modeled HBM traffic of one batched launch.
 
@@ -250,21 +425,135 @@ class LaunchPlan(NamedTuple):
     input_bytes: int
     weight_bytes: int
     output_bytes: int
+    # two-pass extension (defaults describe the single-pass path)
+    path: str = "single"
+    n_chunk: int = 1
+    num_k_blocks: int = 1
+    stats_bytes: int = 0      # VMEM-resident per-block stat intermediate
+    vmem_bytes: int = 0       # modeled peak VMEM working set
+
+    @property
+    def total_bytes(self) -> int:
+        """Total modeled HBM traffic of one launch.  Both paths stream
+        the update matrix exactly once (the two-pass intermediate lives
+        in VMEM scratch, never HBM)."""
+        return self.input_bytes + self.weight_bytes + self.output_bytes
+
+
+def single_pass_vmem_bytes(k: int, n: int, block_m: int) -> int:
+    """Modeled peak VMEM working set of the single-pass kernel: the
+    (K_pad, bm) residency, ~3 (P, bm) f32 sort/mask buffers, and ~5
+    (P, N, bm) f32 planes (broadcast weight carries + their sort
+    ping-pong, deviations + sorted copy, IRLS y/u/w peak) -- the
+    full-K networks carry every weight plane, which is exactly what
+    the two-pass path bounds away."""
+    k_pad = k + (k % 2)
+    p = next_pow2(max(k_pad, 2))
+    return 4 * (k_pad * block_m + 3 * p * block_m + 5 * p * n * block_m)
+
+
+def two_pass_vmem_bytes(k: int, n: int, block_m: int, block_k: int,
+                        n_chunk: int) -> int:
+    """Modeled peak VMEM working set of the two-pass kernel: the
+    (K_pad, bm) residency, the (KB, N, bm) x2 stat intermediates, and
+    the largest transient phase -- bk-sized pass-1 sorts, the KB-sized
+    combine sort, or the (bk, n_chunk, bm) IRLS block -- all bounded by
+    (bk | KB, n_chunk, bm), never (K, N, bm)."""
+    kb = -(-k // block_k)
+    k_pad = kb * block_k
+    kbp = next_pow2(max(kb, 2))
+    stats = 2 * kb * n * block_m * 4
+    sort_p1 = 4 * (2 * block_k * block_m + 3 * block_k * n_chunk * block_m)
+    combine = 4 * 3 * kbp * n_chunk * block_m
+    irls = 4 * 3 * block_k * n_chunk * block_m
+    return 4 * k_pad * block_m + stats + max(sort_p1, combine, irls)
+
+
+def two_pass_block_k(k: int) -> int:
+    """Default K block for the two-pass path: one power-of-two block
+    covering the whole axis while it fits a sort network (<= 512 rows,
+    KB == 1 -> exact init), else the largest network the budget allows
+    (KB > 1 -> median-of-medians init)."""
+    return min(next_pow2(max(int(k), 2)), _MAX_BLOCK_K2)
+
+
+def two_pass_n_chunk(n: int, block_m: int, block_k: int) -> int:
+    """Largest N chunk whose transient planes fit the chunk budget,
+    floored so the static chunk loop never exceeds _MAX_N_CHUNKS
+    (trace-size guard; the VMEM model reports the honest cost)."""
+    nc = max(1, _CHUNK_BUDGET_BYTES // (16 * block_k * block_m))
+    nc = min(int(n), nc)
+    while -(-n // nc) > _MAX_N_CHUNKS:
+        nc *= 2
+    return min(int(n), nc)
+
+
+def auto_path(k: int, n: int, block_m: int) -> str:
+    """The heuristic single<->two-pass crossover (used when no autotuned
+    winner is cached): two-pass iff the mesh is larger than the
+    single-pass sweet spot AND the single-pass VMEM model overflows the
+    budget.  Small meshes always stay on the measured single-pass path
+    (bit-stable with the pre-two-pass kernel)."""
+    if int(k) >= _TWO_PASS_MIN_K and \
+            single_pass_vmem_bytes(k, n, block_m) > VMEM_BUDGET_BYTES:
+        return "two_pass"
+    return "single"
 
 
 def launch_plan(k: int, m: int, n: int = 1, *,
                 dtype=jnp.float32,
                 block_m: Optional[int] = None,
-                block_k: Optional[int] = None) -> LaunchPlan:
-    """Resolve tile sizes (via kernels.tuning when unset) and derive the
-    grid and per-launch modeled HBM traffic for a (K, M) x (K, N) run."""
-    if block_m is None or block_k is None:
+                block_k: Optional[int] = None,
+                path: Optional[str] = None,
+                n_chunk: Optional[int] = None) -> LaunchPlan:
+    """Resolve the kernel path + tile sizes (via kernels.tuning when
+    unset) and derive the grid, modeled HBM traffic and modeled VMEM
+    residency for a (K, M) x (K, N) run.  ``path=None`` auto-selects:
+    the cached tuning winner for the workload if one names a path, else
+    the ``auto_path`` VMEM-crossover heuristic."""
+    if path is not None and path not in PATHS:
+        raise ValueError(f"unknown kernel path {path!r}; known: {PATHS}")
+    if block_m is None or block_k is None or path is None:
         from repro.kernels import tuning  # deferred: tuning times _launch
-        bm_t, bk_t = tuning.get_blocks(k, m, n=n, dtype=dtype)
+        choice = tuning.get_choice(k, m, n=n, dtype=dtype)
         if block_m is None:
-            block_m = bm_t
-        if block_k is None:
-            block_k = bk_t
+            block_m = choice.block_m
+        if path is None:
+            path = choice.path
+        if block_k is None and (choice.path or "single") == \
+                (path or auto_path(k, n, block_m)):
+            # a cached block_k only transfers to the path it was
+            # measured on (a single-pass bk is not a valid 2-pass bk)
+            block_k = choice.block_k
+    if path is None:
+        path = auto_path(k, n, block_m)
+
+    itemsize = jnp.dtype(dtype).itemsize
+    m_total = m + ((-m) % block_m)
+
+    if path == "two_pass":
+        bk = two_pass_block_k(k) if block_k is None else int(block_k)
+        if bk < 2 or bk & (bk - 1):
+            raise ValueError(
+                f"two-pass block_k must be a power of two >= 2, got {bk}")
+        kb = -(-k // bk)
+        k_pad = kb * bk
+        nc = two_pass_n_chunk(n, block_m, bk) if n_chunk is None \
+            else max(1, min(int(n_chunk), n))
+        grid = (m_total // block_m, kb)
+        fetches = grid[0] * grid[1]
+        return LaunchPlan(
+            grid=grid, block_m=block_m, block_k=bk, k_pad=k_pad,
+            m_total=m_total, n_out=n,
+            input_block_fetches=fetches,
+            input_bytes=fetches * bk * block_m * itemsize,
+            weight_bytes=k_pad * n * 4,
+            output_bytes=n * m_total * itemsize,
+            path=path, n_chunk=nc, num_k_blocks=kb,
+            stats_bytes=2 * kb * n * block_m * 4,
+            vmem_bytes=two_pass_vmem_bytes(k, n, block_m, bk, nc),
+        )
+
     if block_k is None:
         bk = k + (k % 2)
     else:
@@ -272,10 +561,8 @@ def launch_plan(k: int, m: int, n: int = 1, *,
             raise ValueError(f"block_k must be positive and even, got {block_k}")
         bk = block_k
     k_pad = ((k + bk - 1) // bk) * bk
-    m_total = m + ((-m) % block_m)
     grid = (m_total // block_m, k_pad // bk)
     fetches = grid[0] * grid[1]
-    itemsize = jnp.dtype(dtype).itemsize
     return LaunchPlan(
         grid=grid, block_m=block_m, block_k=bk, k_pad=k_pad,
         m_total=m_total, n_out=n,
@@ -283,6 +570,9 @@ def launch_plan(k: int, m: int, n: int = 1, *,
         input_bytes=fetches * bk * block_m * itemsize,
         weight_bytes=k_pad * n * 4,
         output_bytes=n * m_total * itemsize,
+        path=path, n_chunk=1, num_k_blocks=k_pad // bk,
+        stats_bytes=0,
+        vmem_bytes=single_pass_vmem_bytes(k, n, block_m),
     )
 
 
@@ -326,13 +616,16 @@ def _launch(
     block_m: Optional[int],
     block_k: Optional[int],
     interpret: Optional[bool],
+    path: Optional[str] = None,
+    n_chunk: Optional[int] = None,
 ) -> jnp.ndarray:
     """Run the fused kernel: (K, M) values x (K, N) weights -> (N, M).
 
     Weight columns are normalized (and invalid columns replaced by
     uniform) here -- the in-kernel weighted median selects the absolute
     cumulative-weight-0.5 crossing, so unnormalized weights would be
-    silently wrong, not just scaled.
+    silently wrong, not just scaled.  ``path`` picks the single-pass or
+    two-pass kernel (None = launch_plan's auto selection).
     """
     if interpret is None:
         interpret = jax.default_backend() == "cpu"
@@ -341,12 +634,27 @@ def _launch(
         a = location.normalize_weights(a, dtype=jnp.float32)
     n_out = a.shape[1]
     plan = launch_plan(k, m, n_out, dtype=x.dtype,
-                       block_m=block_m, block_k=block_k)
+                       block_m=block_m, block_k=block_k,
+                       path=path, n_chunk=n_chunk)
     xp, ap, bk = _pad_inputs(x, a, plan=plan)
     k_pad, m_total = xp.shape
 
-    kernel = functools.partial(_mm_kernel, k=k, block_k=bk,
-                               num_iters=num_iters, c=c, weighted=weighted)
+    if plan.path == "two_pass":
+        kernel = functools.partial(
+            _mm_two_pass_kernel, k=k, block_k=bk, n_chunk=plan.n_chunk,
+            num_iters=num_iters, c=c, weighted=weighted)
+        scratch = [
+            pltpu.VMEM((k_pad, plan.block_m), jnp.float32),
+            pltpu.VMEM((plan.num_k_blocks, n_out, plan.block_m),
+                       jnp.float32),
+            pltpu.VMEM((plan.num_k_blocks, n_out, plan.block_m),
+                       jnp.float32),
+        ]
+    else:
+        kernel = functools.partial(_mm_kernel, k=k, block_k=bk,
+                                   num_iters=num_iters, c=c,
+                                   weighted=weighted)
+        scratch = [pltpu.VMEM((k_pad, plan.block_m), jnp.float32)]
     out = pl.pallas_call(
         kernel,
         grid=plan.grid,
@@ -356,7 +664,7 @@ def _launch(
         ],
         out_specs=pl.BlockSpec((n_out, plan.block_m), lambda mi, ki: (0, mi)),
         out_shape=jax.ShapeDtypeStruct((n_out, m_total), x.dtype),
-        scratch_shapes=[pltpu.VMEM((k_pad, plan.block_m), jnp.float32)],
+        scratch_shapes=scratch,
         interpret=interpret,
     )(xp, ap)
     return out[:, :m]
@@ -375,13 +683,14 @@ def mm_aggregate_2d(
     block_m: Optional[int] = None,
     block_k: Optional[int] = None,
     interpret: Optional[bool] = None,
+    path: Optional[str] = None,
 ) -> jnp.ndarray:
     """MM-aggregate a (K, M) array along axis 0 -> (M,) via Pallas.
 
     ``a`` is an optional (K,) vector of combination weights; it is
     normalized internally (invalid weights fall back to uniform, as in
-    ``repro.core.location.normalize_weights``).  Block sizes default to
-    the kernels.tuning cache/heuristic.
+    ``repro.core.location.normalize_weights``).  Block sizes and the
+    kernel path default to the kernels.tuning cache/heuristic.
     """
     if x.ndim != 2:
         raise ValueError(f"mm_aggregate_2d wants (K, M), got {x.shape}")
@@ -393,7 +702,8 @@ def mm_aggregate_2d(
             raise ValueError(f"weights must be ({k},), got {a.shape}")
         aw, weighted = a.reshape(k, 1), True
     out = _launch(x, aw, weighted=weighted, num_iters=num_iters, c=c,
-                  block_m=block_m, block_k=block_k, interpret=interpret)
+                  block_m=block_m, block_k=block_k, interpret=interpret,
+                  path=path)
     return out[0]
 
 
@@ -406,6 +716,8 @@ def mm_aggregate_batched_2d(
     block_m: Optional[int] = None,
     block_k: Optional[int] = None,
     interpret: Optional[bool] = None,
+    path: Optional[str] = None,
+    n_chunk: Optional[int] = None,
 ) -> jnp.ndarray:
     """Batched weighted MM-aggregation: (K, M) values, (K, N) weight
     columns -> (N, M) estimates, one kernel launch.
@@ -415,10 +727,12 @@ def mm_aggregate_batched_2d(
     streamed from HBM exactly ONCE regardless of N -- all N estimates
     are computed in the kernel body from the single VMEM residency (see
     the module docstring); this is the diffusion hot path (K, N = graph
-    size, 16-64 here).
+    size).  ``path`` selects the single-pass or two-pass (K >> 64)
+    kernel; None auto-selects via launch_plan.
     """
     if x.ndim != 2 or a.ndim != 2 or a.shape[0] != x.shape[0]:
         raise ValueError(
             f"want x (K, M) and a (K, N), got {x.shape} and {a.shape}")
     return _launch(x, a, weighted=True, num_iters=num_iters, c=c,
-                   block_m=block_m, block_k=block_k, interpret=interpret)
+                   block_m=block_m, block_k=block_k, interpret=interpret,
+                   path=path, n_chunk=n_chunk)

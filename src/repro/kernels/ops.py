@@ -99,8 +99,9 @@ def _tukey(c: float):
 
 
 @functools.partial(jax.jit, static_argnames=(
-    "num_iters", "c", "block_m", "block_k", "interpret", "backend"))
-def _agg_nd(x, a, *, num_iters, c, block_m, block_k, interpret, backend):
+    "num_iters", "c", "block_m", "block_k", "interpret", "backend", "path"))
+def _agg_nd(x, a, *, num_iters, c, block_m, block_k, interpret, backend,
+            path=None):
     """(K, ...) -> (...), optional (K,) weights.
 
     The jnp backend never flattens trailing dims (the estimate is
@@ -117,14 +118,14 @@ def _agg_nd(x, a, *, num_iters, c, block_m, block_k, interpret, backend):
     k = x.shape[0]
     out = _k.mm_aggregate_2d(x.reshape(k, -1), a, num_iters=num_iters, c=c,
                              block_m=block_m, block_k=block_k,
-                             interpret=interpret)
+                             interpret=interpret, path=path)
     return out.reshape(x.shape[1:])
 
 
 @functools.partial(jax.jit, static_argnames=(
-    "num_iters", "c", "block_m", "block_k", "interpret", "backend"))
+    "num_iters", "c", "block_m", "block_k", "interpret", "backend", "path"))
 def _agg_batched_2d(flat, a, *, num_iters, c, block_m, block_k, interpret,
-                    backend):
+                    backend, path=None):
     """(K, M) x (K, N) -> (N, M)."""
     if backend == "jnp":
         xf = flat.astype(jnp.float32)
@@ -136,7 +137,7 @@ def _agg_batched_2d(flat, a, *, num_iters, c, block_m, block_k, interpret,
         return out.astype(flat.dtype)
     return _k.mm_aggregate_batched_2d(flat, a, num_iters=num_iters, c=c,
                                       block_m=block_m, block_k=block_k,
-                                      interpret=interpret)
+                                      interpret=interpret, path=path)
 
 
 def _agg_tree_impl(leaves, a, *, sizes, offsets, shapes, dtypes, opts):
@@ -202,9 +203,13 @@ class AggregationEngine:
     through ``kernels.tuning`` (autotuned winner if cached, heuristic
     otherwise); ``autotune=True`` additionally runs the timing sweep on
     first sight of a workload shape (only outside jit tracing -- traced
-    calls fall back to the cache/heuristic).  ``donate_leaves=True``
-    lets the tree path donate the input gradient leaves to the staging
-    scatter (see module docstring).
+    calls fall back to the cache/heuristic).  ``path`` pins the kernel
+    variant (``"single"`` | ``"two_pass"``); the default ``None``
+    auto-selects per workload (tuning-cache crossover winner, else the
+    VMEM-model heuristic -- large-K meshes transparently take the
+    two-pass K-major kernel).  ``donate_leaves=True`` lets the tree
+    path donate the input gradient leaves to the staging scatter (see
+    module docstring).
     """
 
     def __init__(self, *, num_iters: int = 10,
@@ -214,9 +219,13 @@ class AggregationEngine:
                  interpret: Optional[bool] = None,
                  backend: str = "pallas",
                  autotune: bool = False,
-                 donate_leaves: bool = False):
+                 donate_leaves: bool = False,
+                 path: Optional[str] = None):
         if backend not in ("pallas", "jnp"):
             raise ValueError(f"unknown backend {backend!r}")
+        if path is not None and path not in _k.PATHS:
+            raise ValueError(
+                f"unknown kernel path {path!r}; known: {_k.PATHS}")
         self.num_iters = num_iters
         self.c = c
         self.block_m = block_m
@@ -225,6 +234,7 @@ class AggregationEngine:
         self.backend = backend
         self.autotune = autotune
         self.donate_leaves = donate_leaves
+        self.path = path
         self._layouts: dict = {}
 
     def _blocks_for(self, x, k: int, m: int, n: int = 1):
@@ -245,14 +255,33 @@ class AggregationEngine:
         return tuning.get_blocks(k, m, n, dtype)
 
     def _opts(self, x, k: int, m: int, n: int = 1):
-        bm, bk = self._blocks_for(x, k, m, n)
-        _record_workload({
-            "k": int(k), "m": int(m), "n": int(n),
-            "dtype": jnp.dtype(x.dtype).name, "backend": self.backend,
-            "block_m": bm, "block_k": bk})
-        return dict(num_iters=self.num_iters, c=self.c, block_m=bm,
-                    block_k=bk, interpret=self.interpret,
-                    backend=self.backend)
+        entry = {"k": int(k), "m": int(m), "n": int(n),
+                 "dtype": jnp.dtype(x.dtype).name, "backend": self.backend}
+        if self.backend != "pallas":
+            bm, bk = self._blocks_for(x, k, m, n)
+            entry.update(block_m=bm, block_k=bk, path=None)
+            _record_workload(entry)
+            return dict(num_iters=self.num_iters, c=self.c, block_m=bm,
+                        block_k=bk, interpret=self.interpret,
+                        backend=self.backend, path=None)
+        if self.autotune and self.block_m is None \
+                and not isinstance(x, jax.core.Tracer):
+            # warm the tuning cache so the plan below picks the winner
+            tuning.autotune(k, m, n, x.dtype, num_iters=self.num_iters,
+                            interpret=self.interpret)
+        # the plan resolves everything the launch needs -- tile sizes
+        # AND the single<->two-pass path (tuning winner or the VMEM
+        # crossover heuristic); recording the *resolved* geometry makes
+        # the launch audits ground truth for both paths.
+        plan = _k.launch_plan(k, m, n, dtype=x.dtype, block_m=self.block_m,
+                              block_k=self.block_k, path=self.path)
+        entry.update(block_m=plan.block_m, block_k=plan.block_k,
+                     path=plan.path)
+        _record_workload(entry)
+        return dict(num_iters=self.num_iters, c=self.c,
+                    block_m=plan.block_m, block_k=plan.block_k,
+                    interpret=self.interpret, backend=self.backend,
+                    path=plan.path)
 
     # -- arrays ------------------------------------------------------------
 
@@ -307,9 +336,10 @@ def get_engine(**kwargs) -> AggregationEngine:
     return AggregationEngine(**kwargs)
 
 
-def _engine(num_iters, c, block_m, block_k, interpret, backend):
+def _engine(num_iters, c, block_m, block_k, interpret, backend, path=None):
     return get_engine(num_iters=num_iters, c=c, block_m=block_m,
-                      block_k=block_k, interpret=interpret, backend=backend)
+                      block_k=block_k, interpret=interpret, backend=backend,
+                      path=path)
 
 
 def mm_aggregate(
@@ -322,10 +352,11 @@ def mm_aggregate(
     block_k: Optional[int] = None,
     interpret: Optional[bool] = None,
     backend: str = "pallas",
+    path: Optional[str] = None,
 ) -> jnp.ndarray:
     """MM location estimate along axis 0: (K, ...) -> (...)."""
     return _engine(num_iters, c, block_m, block_k, interpret,
-                   backend).aggregate(x, a)
+                   backend, path).aggregate(x, a)
 
 
 def mm_aggregate_batched(
@@ -338,10 +369,11 @@ def mm_aggregate_batched(
     block_k: Optional[int] = None,
     interpret: Optional[bool] = None,
     backend: str = "pallas",
+    path: Optional[str] = None,
 ) -> jnp.ndarray:
     """Batched weighted aggregation: (K, ...) x (K, N) -> (N, ...)."""
     return _engine(num_iters, c, block_m, block_k, interpret,
-                   backend).aggregate_batched(x, a)
+                   backend, path).aggregate_batched(x, a)
 
 
 def mm_aggregate_tree(
@@ -354,7 +386,8 @@ def mm_aggregate_tree(
     block_k: Optional[int] = None,
     interpret: Optional[bool] = None,
     backend: str = "pallas",
+    path: Optional[str] = None,
 ):
     """Aggregate a pytree of stacked (K, ...) leaves in ONE kernel launch."""
     return _engine(num_iters, c, block_m, block_k, interpret,
-                   backend).aggregate_tree(tree, a)
+                   backend, path).aggregate_tree(tree, a)

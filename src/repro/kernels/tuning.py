@@ -1,30 +1,36 @@
-"""Block-size autotuner for the batched MM-aggregation kernel.
+"""Block-size + kernel-path autotuner for the MM-aggregation kernels.
 
-The kernel's two performance knobs are ``block_m`` (the lane tile, how
-many coordinates share one VMEM residency) and ``block_k`` (the K
-stream block; ``None`` streams the whole padded K axis as one block).
-The right choice depends on the workload tuple
+The kernel's performance knobs are ``block_m`` (the lane tile, how many
+coordinates share one VMEM residency), ``block_k`` (the K stream block;
+``None`` streams the whole padded K axis as one block on the
+single-pass path, or resolves to ``mm_aggregate.two_pass_block_k`` on
+the two-pass path) and -- since the K-major two-pass kernel landed --
+the *path* itself (``single`` | ``two_pass``).  The right choice
+depends on the workload tuple
 
     (K, M, N, dtype)
 
 because the kernel-body batch over N weight columns multiplies the
-in-register working set: the weighted-median carry planes and the MAD
-deviation planes are (K_pad2, N, block_m) f32, so large K*N wants a
-narrower block_m while small problems want the widest tile the M axis
+in-register working set: on the single-pass path the weighted-median
+carry planes and the MAD deviation planes are (K_pad2, N, block_m) f32,
+so large K*N wants a narrower block_m (and, past the VMEM budget, the
+two-pass path) while small problems want the widest tile the M axis
 supports (less grid overhead, better DMA efficiency).
 
-Two entry points:
+Entry points:
 
-  get_blocks(k, m, n, dtype)  -- cheap, shape-only: returns the cached
-      autotuner winner for the key if one exists, else a VMEM-budget
-      heuristic.  This is what ``mm_aggregate.launch_plan`` (and hence
-      the AggregationEngine) consults by default; it never times
-      anything, so it is safe at trace time.
-  autotune(k, m, n, dtype)    -- sweeps candidate (block_m, block_k)
-      pairs on synthetic data, times the real launcher, caches the
-      winner in the in-process cache, and returns it.  Run it once per
-      workload shape (e.g. from a warmup script or the benchmarks);
-      every later get_blocks/launch for that shape uses the winner.
+  get_blocks(k, m, n, dtype)  -- cheap, shape-only: the cached
+      autotuner winner's (block_m, block_k) if one exists, else a
+      VMEM-budget heuristic.  Safe at trace time (never times).
+  get_choice(k, m, n, dtype)  -- same lookup, full ``TuneChoice``
+      including the kernel path (``path=None`` means "let
+      ``mm_aggregate.auto_path`` decide").  This is what
+      ``mm_aggregate.launch_plan`` (and hence the AggregationEngine)
+      consults by default.
+  autotune(k, m, n, dtype)    -- sweeps candidate (block_m, block_k[,
+      path]) tuples on synthetic data, times the real launcher, caches
+      the winner -- including the measured single<->two-pass crossover
+      for K > 64 workloads -- and returns its (block_m, block_k).
 
 The in-process cache (keyed by TuneKey) additionally persists across
 processes when the ``REPRO_TUNING_CACHE`` environment variable names a
@@ -33,7 +39,9 @@ corrupt or unreadable file silently falls back to the in-process
 heuristic) and every autotune winner is written back atomically
 (tmp file + os.replace), so concurrent writers can at worst lose an
 update, never corrupt the file.  Entries are keyed by
-(K, M, N, dtype, backend).
+(K, M, N, dtype, backend); the optional ``path`` field records the
+kernel path the winner was measured on (absent/null = pre-two-pass
+entry, auto-resolved).
 """
 
 from __future__ import annotations
@@ -46,15 +54,25 @@ from typing import Dict, NamedTuple, Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import mm_aggregate as _mm
 from repro.kernels.mm_aggregate import next_pow2 as _next_pow2
 
 LANE = 128
-# conservative per-core VMEM budget for the kernel-body working set
-# (the full VMEM is ~16 MB; leave room for double buffering + output)
-_VMEM_BUDGET_BYTES = 4 * 2 ** 20
+# the per-core VMEM budget lives with the kernel geometry model
+# (mm_aggregate.VMEM_BUDGET_BYTES); this alias keeps older imports alive
+_VMEM_BUDGET_BYTES = _mm.VMEM_BUDGET_BYTES
 _MAX_BLOCK_M = 1024
 
 BlockChoice = Tuple[int, Optional[int]]   # (block_m, block_k)
+
+
+class TuneChoice(NamedTuple):
+    """A cached tuning decision.  ``path=None`` = no measured path
+    (pre-two-pass cache entry or pure heuristic): the launch plan's
+    ``auto_path`` crossover decides."""
+    block_m: int
+    block_k: Optional[int]
+    path: Optional[str] = None
 
 
 class TuneKey(NamedTuple):
@@ -64,7 +82,7 @@ class TuneKey(NamedTuple):
     dtype: str
 
 
-_CACHE: Dict[TuneKey, BlockChoice] = {}
+_CACHE: Dict[TuneKey, TuneChoice] = {}
 
 ENV_CACHE_PATH = "REPRO_TUNING_CACHE"
 _persistent_loaded = False
@@ -113,7 +131,13 @@ def load_cache(path: Optional[str] = None, *, force: bool = True) -> int:
                 key = TuneKey(int(e["k"]), int(e["m"]), int(e["n"]),
                               str(e["dtype"]))
                 bk = e["block_k"]
-                choice = (int(e["block_m"]), None if bk is None else int(bk))
+                path = e.get("path")
+                if path is not None:
+                    path = str(path)
+                    if path not in _mm.PATHS:
+                        continue
+                choice = TuneChoice(int(e["block_m"]),
+                                    None if bk is None else int(bk), path)
             except (KeyError, TypeError, ValueError, AttributeError):
                 continue    # skip the malformed entry, keep the rest
             if key not in _CACHE:
@@ -136,8 +160,8 @@ def save_cache(path: Optional[str] = None) -> Optional[str]:
     load_cache(path, force=True)
     entries = [
         {"k": key.k, "m": key.m, "n": key.n, "dtype": key.dtype,
-         "backend": "pallas", "block_m": bm, "block_k": bk}
-        for key, (bm, bk) in sorted(_CACHE.items())
+         "backend": "pallas", "block_m": bm, "block_k": bk, "path": path}
+        for key, (bm, bk, path) in sorted(_CACHE.items())
     ]
     payload = {"version": 1, "entries": entries}
     tmp = f"{path}.tmp.{os.getpid()}"
@@ -176,8 +200,9 @@ def heuristic_blocks(k: int, m: int, n: int = 1,
     bm = max(LANE, min(_MAX_BLOCK_M, bm))
     m_lanes = max(LANE, ((int(m) + LANE - 1) // LANE) * LANE)
     bm = min(bm, m_lanes)
-    # stream the whole (small) K axis as one block: K <= 64 in every
-    # supported mesh, so a K-split only adds grid steps
+    # stream the whole (small) K axis as one block on the single-pass
+    # path (a K-split only adds grid steps there); the two-pass path
+    # derives its own power-of-two K block in mm_aggregate
     return bm, None
 
 
@@ -186,21 +211,53 @@ def get_blocks(k: int, m: int, n: int = 1, dtype=jnp.float32,
     """Resolve block sizes for a workload shape: cached autotuner winner
     if one exists, else the heuristic.  Shape-only -- safe under jit
     tracing (never times, never touches array values)."""
+    choice = get_choice(k, m, n, dtype, backend)
+    return (choice.block_m, choice.block_k)
+
+
+def get_choice(k: int, m: int, n: int = 1, dtype=jnp.float32,
+               backend: str = "pallas") -> TuneChoice:
+    """Full tuning decision for a workload shape, including the kernel
+    path the winner was measured on (``path=None`` -> no measurement:
+    ``mm_aggregate.auto_path`` decides).  Shape-only, trace-safe."""
     if backend != "pallas":
-        return heuristic_blocks(k, m, n, dtype)
+        return TuneChoice(*heuristic_blocks(k, m, n, dtype))
     load_cache(force=False)   # lazy one-time merge of $REPRO_TUNING_CACHE
-    return _CACHE.get(_key(k, m, n, dtype)) or heuristic_blocks(k, m, n, dtype)
+    cached = _CACHE.get(_key(k, m, n, dtype))
+    if cached is not None:
+        return cached
+    return TuneChoice(*heuristic_blocks(k, m, n, dtype))
 
 
-def set_blocks(k: int, m: int, n: int, dtype, choice: BlockChoice) -> None:
-    """Pin a block choice (tests / precomputed tuning tables)."""
-    _CACHE[_key(k, m, n, dtype)] = (int(choice[0]),
-                                    None if choice[1] is None
-                                    else int(choice[1]))
+def _as_choice(choice) -> TuneChoice:
+    bm = int(choice[0])
+    bk = None if choice[1] is None else int(choice[1])
+    path = choice[2] if len(choice) > 2 else None
+    if path is not None and path not in _mm.PATHS:
+        raise ValueError(f"unknown kernel path {path!r}; known: {_mm.PATHS}")
+    return TuneChoice(bm, bk, path)
+
+
+def set_blocks(k: int, m: int, n: int, dtype, choice) -> None:
+    """Pin a block choice (tests / precomputed tuning tables).  Accepts
+    a (block_m, block_k) pair or a full (block_m, block_k, path)
+    TuneChoice."""
+    _CACHE[_key(k, m, n, dtype)] = _as_choice(choice)
 
 
 def cache_size() -> int:
     return len(_CACHE)
+
+
+def cache_state() -> tuple:
+    """Hashable fingerprint of the tuning state that block/path
+    resolution depends on.  Anything that caches a *compiled* program
+    whose geometry came from ``get_choice`` (e.g. the scenario runner's
+    executable cache) must key on this: a new autotune winner or a
+    different $REPRO_TUNING_CACHE would otherwise serve a stale
+    executable built for the old geometry."""
+    load_cache(force=False)
+    return (tuple(sorted(_CACHE.items())), cache_path())
 
 
 def clear_cache() -> None:
@@ -217,8 +274,9 @@ def _time_call_us(fn, *args, reps: int = 3) -> float:
 
 def candidate_blocks(k: int, m: int, n: int = 1,
                      dtype=jnp.float32) -> Sequence[BlockChoice]:
-    """Default sweep: lane tiles around the heuristic, full-K streaming
-    plus one K-split when the padded K axis is large enough to split."""
+    """Default single-pass sweep: lane tiles around the heuristic,
+    full-K streaming plus one K-split when the padded K axis is large
+    enough to split."""
     bms = sorted({LANE, 256, 512, heuristic_blocks(k, m, n, dtype)[0]})
     m_lanes = max(LANE, ((int(m) + LANE - 1) // LANE) * LANE)
     bms = [bm for bm in bms if bm <= m_lanes] or [LANE]
@@ -234,40 +292,69 @@ def candidate_blocks(k: int, m: int, n: int = 1,
     return out
 
 
+def candidate_choices(k: int, m: int, n: int = 1,
+                      dtype=jnp.float32) -> Sequence[TuneChoice]:
+    """Default crossover sweep: every single-pass candidate plus -- for
+    meshes past the single-pass sweet spot -- two-pass variants (the
+    auto K block and one split) so ``autotune`` measures the
+    single<->two-pass crossover per (K, M, N, dtype) and caches it.
+    Single-pass candidates whose modeled VMEM would overflow the budget
+    by more than 4x are skipped rather than timed (they cannot run on
+    hardware; timing them in interpret mode would reward a geometry the
+    TPU cannot host)."""
+    out = []
+    for bm, bk in candidate_blocks(k, m, n, dtype):
+        if _mm.single_pass_vmem_bytes(k, n, bm) <= \
+                4 * _mm.VMEM_BUDGET_BYTES:
+            out.append(TuneChoice(bm, bk, "single"))
+    if int(k) >= _mm._TWO_PASS_MIN_K:
+        bm0 = heuristic_blocks(k, m, n, dtype)[0]
+        bk0 = _mm.two_pass_block_k(k)
+        for bm in sorted({LANE, bm0}):
+            out.append(TuneChoice(bm, bk0, "two_pass"))
+            if bk0 >= 16:
+                out.append(TuneChoice(bm, bk0 // 2, "two_pass"))
+    return out or [TuneChoice(*heuristic_blocks(k, m, n, dtype))]
+
+
 def autotune(k: int, m: int, n: int = 1, dtype=jnp.float32, *,
-             candidates: Optional[Sequence[BlockChoice]] = None,
+             candidates: Optional[Sequence] = None,   # BlockChoice|TuneChoice
              num_iters: int = 10,
              reps: int = 3,
              interpret: Optional[bool] = None,
              force: bool = False) -> BlockChoice:
-    """Sweep (block_m, block_k) candidates on synthetic data, cache and
-    return the fastest.  Idempotent per (K, M, N, dtype) unless
-    ``force``; failures of individual candidates are skipped (e.g. a
-    tile too large for the backend)."""
+    """Sweep (block_m, block_k[, path]) candidates on synthetic data,
+    cache and return the fastest (the cached ``TuneChoice`` keeps the
+    measured path; the returned pair stays (block_m, block_k) for
+    callers that only size tiles).  Idempotent per (K, M, N, dtype)
+    unless ``force``; failures of individual candidates are skipped
+    (e.g. a tile too large for the backend)."""
     from repro.kernels import mm_aggregate as _mk  # full module, lazily
 
     key = _key(k, m, n, dtype)
     if not force and key in _CACHE:
-        return _CACHE[key]
+        return (_CACHE[key].block_m, _CACHE[key].block_k)
     kx, ka = jax.random.split(jax.random.key(0))
     x = jax.random.normal(kx, (k, m)).astype(dtype)
     a = jax.random.uniform(ka, (k, n), minval=0.1, maxval=1.0,
                            dtype=jnp.float32)
-    best: Optional[BlockChoice] = None
+    best: Optional[TuneChoice] = None
     best_us = float("inf")
-    for bm, bk in (candidates or candidate_blocks(k, m, n, dtype)):
-        def run(xv, av, _bm=bm, _bk=bk):
+    for cand in (candidates or candidate_choices(k, m, n, dtype)):
+        cand = _as_choice(cand)
+
+        def run(xv, av, _c=cand):
             return _mk.mm_aggregate_batched_2d(
-                xv, av, num_iters=num_iters, block_m=_bm, block_k=_bk,
-                interpret=interpret)
+                xv, av, num_iters=num_iters, block_m=_c.block_m,
+                block_k=_c.block_k, path=_c.path, interpret=interpret)
         try:
             us = _time_call_us(jax.jit(run), x, a, reps=reps)
         except Exception:
             continue
         if us < best_us:
-            best, best_us = (bm, bk), us
+            best, best_us = cand, us
     if best is None:    # every candidate failed: fall back, don't cache
         return heuristic_blocks(k, m, n, dtype)
     _CACHE[key] = best
     save_cache()        # best-effort persist of the measured winner
-    return best
+    return (best.block_m, best.block_k)

@@ -227,6 +227,7 @@ class ScenarioResult:
     launch_audit: Optional[dict]       # mm_aggregate.launch_plan (pallas)
     final_state: Any                   # (M,) server model or (K, M) stack
     compile_s: float = 0.0             # AOT lower + compile of the scan
+    compile_cache_hit: bool = False    # reused the in-process executable
 
     @property
     def final_msd(self) -> float:
@@ -258,6 +259,7 @@ class ScenarioResult:
             "seed": s.seed,
             "wall_clock_s": round(self.wall_clock_s, 4),
             "compile_s": round(self.compile_s, 4),
+            "compile_cache_hit": self.compile_cache_hit,
             "model_config": s.model_config or None,
             "final_msd": num(self.final_msd),
             "steady_msd": num(self.summary["steady_msd"]),

@@ -490,3 +490,81 @@ def test_tuning_cache_env_path(tmp_path, monkeypatch):
     tuning.set_blocks(9, 256, 1, jnp.float32, (128, None))
     assert tuning.save_cache() == path
     assert os.path.exists(path)
+
+
+# ===========================================================================
+# satellite: scenario-runner executable cache
+# ===========================================================================
+
+def test_second_run_of_identical_spec_hits_compile_cache():
+    """A repeated run of the exact same spec must reuse the compiled
+    scan (compile_cache_hit, compile_s == 0) with identical results,
+    identical launch audit, and a steady wall clock that is still a
+    real measurement of the same program."""
+    from repro.scenarios import runner
+
+    sp = scenarios.ScenarioSpec(paradigm="diffusion", aggregator="mm_tukey",
+                                backend="pallas", num_malicious=2,
+                                num_agents=K, dim=DIM, num_steps=9)
+    runner.clear_executable_cache()
+    try:
+        r1 = scenarios.run(sp)
+        r2 = scenarios.run(sp)
+        assert not r1.compile_cache_hit and r1.compile_s > 0.0
+        assert r2.compile_cache_hit and r2.compile_s == 0.0
+        assert r2.wall_clock_s > 0.0
+        for name in r1.history:
+            np.testing.assert_array_equal(r1.history[name],
+                                          r2.history[name])
+        assert r1.launch_audit == r2.launch_audit
+        row = r2.to_row()
+        assert row["compile_cache_hit"] is True
+        # a *different* spec is a miss
+        r3 = scenarios.run(
+            scenarios.ScenarioSpec(paradigm="diffusion",
+                                   aggregator="mm_tukey", backend="pallas",
+                                   num_malicious=2, num_agents=K, dim=DIM,
+                                   num_steps=8))
+        assert not r3.compile_cache_hit
+    finally:
+        runner.clear_executable_cache()
+
+
+def test_executable_cache_keys_on_tuning_state():
+    """A new tuning winner changes the kernel geometry the compiled
+    program bakes in: the executable cache must miss, recompile, and
+    audit the new geometry."""
+    from repro.scenarios import runner
+
+    sp = scenarios.ScenarioSpec(paradigm="diffusion", aggregator="mm_tukey",
+                                backend="pallas", num_agents=K, dim=DIM,
+                                num_steps=7)
+    runner.clear_executable_cache()
+    tuning.clear_cache()
+    try:
+        r1 = scenarios.run(sp)
+        tuning.set_blocks(K, DIM, K, jnp.float32, (256, None))
+        r2 = scenarios.run(sp)
+        assert not r2.compile_cache_hit, \
+            "tuning-state change must invalidate the executable cache"
+        assert r2.launch_audit["block_m"] == 256
+        assert r1.launch_audit["block_m"] != 256
+    finally:
+        tuning.clear_cache()
+        runner.clear_executable_cache()
+
+
+def test_w0_override_reuses_cached_executable():
+    from repro.scenarios import runner
+
+    sp = scenarios.ScenarioSpec(paradigm="federated", aggregator="mm_tukey",
+                                num_agents=K, dim=DIM, num_steps=6)
+    runner.clear_executable_cache()
+    try:
+        r1 = scenarios.run(sp)
+        r2 = scenarios.run(sp, w0=np.ones(DIM, np.float32))
+        assert r2.compile_cache_hit     # same avals, same program
+        assert not np.array_equal(r1.history["msd"], r2.history["msd"])
+        assert r2.finite()
+    finally:
+        runner.clear_executable_cache()
