@@ -1,9 +1,11 @@
 #!/usr/bin/env bash
-# Tier-1 verification: the whole suite, fail-fast, quiet -- then a
-# smoke run of the aggregation benchmark that emits BENCH_agg.json
-# (shape -> µs/call + modeled HBM bytes + pallas_call count, plus the
-# one-residency traffic audit for BOTH kernel paths and the IRLS-depth
-# sweep) so the perf trajectory is tracked from every CI run onward.
+# Tier-1 verification: the whole suite, fail-fast, quiet -- then the
+# static-analysis gate (kernel-contract checker, jaxpr auditor, JAX
+# pitfall linter; see docs/analysis.md) and a smoke run of the
+# aggregation benchmark that emits BENCH_agg.json (shape -> µs/call +
+# modeled HBM bytes + pallas_call count, plus the one-residency traffic
+# audit for BOTH kernel paths and the IRLS-depth sweep) so the perf
+# trajectory is tracked from every CI run onward.
 # (pyproject's pytest pythonpath handles src/ resolution; the explicit
 # PYTHONPATH export keeps the command working for tools that bypass
 # pytest's ini, e.g. the subprocess-based multi-device tests.)
@@ -15,22 +17,23 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 # CI re-runs amortize them across invocations.  Pre-set values win.
 export JAX_COMPILATION_CACHE_DIR="${JAX_COMPILATION_CACHE_DIR:-.jax_compile_cache}"
 python -m pytest -x -q "$@"
+# style lint (config in pyproject.toml); gated on availability since the
+# analysis image does not ship ruff -- the repro.analysis gate below is
+# the hard semantic gate either way.
+if command -v ruff >/dev/null 2>&1; then
+    ruff check src tests benchmarks examples
+else
+    echo "ruff not installed; skipping style lint (semantic gate below still runs)"
+fi
+# static-analysis gate (hard): contracts + jaxpr audit + lint must
+# produce zero findings outside ANALYSIS_BASELINE.json.
+python -m repro.analysis
 # agg benchmark smoke: includes the large-K two-pass row (K=256) and
-# exits non-zero on any non-finite kernel output.
+# exits non-zero on any non-finite kernel output.  The audit rules over
+# the emitted JSON live in repro.analysis.bench_audit (unit-tested;
+# both kernel paths covered, N-independent, within the VMEM model).
 python benchmarks/agg_bench.py --smoke --json BENCH_agg.json
-# the emitted traffic audit must cover BOTH kernel paths, with the
-# two-pass audit N-independent and within the modeled VMEM budget.
-python - <<'PY'
-import json
-b = json.load(open("BENCH_agg.json"))
-paths = {a["path"] for a in b["traffic_audit"]}
-assert paths >= {"single", "two_pass"}, f"audit paths incomplete: {paths}"
-assert all(a["n_independent"] for a in b["traffic_audit"]), "N-dependent input stream"
-assert any(r["name"].startswith("agg/mm_pallas_two_pass/K256")
-           for r in b["rows"]), "missing K=256 two-pass smoke row"
-assert b["irls_sweep"], "missing IRLS-depth sweep"
-print("BENCH_agg.json audit ok:", sorted(paths))
-PY
+python -m repro.analysis.bench_audit BENCH_agg.json
 # scenario smoke sweep: 3 tiny specs covering the three linear paradigms
 # on the pallas backend (each result carries the kernel launch audit);
 # exits non-zero on any non-finite metric and emits per-spec rows with
@@ -38,24 +41,11 @@ PY
 python examples/scenario_sweep.py --smoke --json BENCH_scenarios.json
 # large-cohort smoke family: K=1024 federated at 0.5 participation runs
 # a 512-agent aggregation through the two-pass kernel end to end (the
-# single-pass plan would overflow the VMEM budget); the audit rides on
-# the BENCH rows and is asserted below.
+# single-pass plan would overflow the VMEM budget); the audit rules ride
+# in repro.analysis.bench_audit.
 python examples/scenario_sweep.py --family large_cohort --smoke \
     --json BENCH_large_cohort.json
-python - <<'PY'
-import json
-rows = json.load(open("BENCH_large_cohort.json"))["rows"]
-from repro.kernels import mm_aggregate as mk
-two = [r for r in rows if (r["launch_audit"] or {}).get("path") == "two_pass"]
-assert two, "no two-pass scenario in the large-cohort smoke family"
-for r in two:
-    a = r["launch_audit"]
-    assert a["vmem_bytes"] <= mk.VMEM_BUDGET_BYTES, (r["name"], a["vmem_bytes"])
-    assert mk.single_pass_vmem_bytes(a["k_pad"], a["n_out"], a["block_m"]) \
-        > mk.VMEM_BUDGET_BYTES, "two-pass engaged where single-pass fits"
-print(f"large-cohort audit ok: {len(two)} two-pass scenario(s), K="
-      f"{[r['launch_audit']['k_pad'] for r in two]}")
-PY
+python -m repro.analysis.bench_audit BENCH_large_cohort.json
 # substrate smoke spec: one LM-substrate scenario driving launch.steps'
 # robust train step through the same runner (pallas backend -> per-layout
 # launch audit); the sweep exits non-zero on non-finite loss.

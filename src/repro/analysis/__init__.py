@@ -1,0 +1,25 @@
+"""Static verification of the repo's modeled invariants.
+
+Three passes, one CLI gate (``python -m repro.analysis``):
+
+  contracts     statically verify ``mm_aggregate.launch_plan`` against
+                the realized kernel configuration (BlockSpec index
+                maps -> one-residency HBM traffic, scratch shapes ->
+                VMEM model, output surface -> no HBM stat round-trip).
+  jaxpr_audit   trace the real engine / scenario programs and assert
+                structural jaxpr invariants (one pallas_call per
+                layout, no callbacks in steady paths, bf16 streams not
+                silently upcast, donation reflected in the lowering).
+  lint          repo-specific AST rules over ``src/`` for JAX pitfalls
+                (traced branches, host syncs, non-frozen spec
+                dataclasses, mutable defaults, import-time jnp).
+
+Intentional exceptions live in ``ANALYSIS_BASELINE.json`` (repo root),
+every entry with a reason string; the CLI exits non-zero on any
+unbaselined finding, making the analyzer a hard ci.sh gate.  See
+``docs/analysis.md`` for the rule catalog and baseline workflow.
+"""
+
+from repro.analysis.findings import Finding, apply, load_baseline
+
+__all__ = ["Finding", "apply", "load_baseline"]

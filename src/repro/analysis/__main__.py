@@ -1,0 +1,99 @@
+"""``python -m repro.analysis`` -- run the static-analysis gate.
+
+Runs the three passes (or a subset via ``--passes``), applies the
+checked-in baseline, prints every finding, and exits non-zero if any
+finding is not baselined.  ``ci.sh`` runs this right after pytest.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+import time
+
+from repro.analysis import findings as F
+
+PASSES = ("lint", "contracts", "jaxpr")
+
+
+def run_pass(name: str, root: pathlib.Path):
+    if name == "lint":
+        from repro.analysis import lint
+        return lint.check_tree(root)
+    if name == "contracts":
+        from repro.analysis import contracts
+        return contracts.check_workloads()
+    if name == "jaxpr":
+        from repro.analysis import jaxpr_audit
+        return jaxpr_audit.check_all()
+    raise ValueError(f"unknown pass {name!r}; known: {PASSES}")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="kernel-contract checker, jaxpr auditor and JAX "
+                    "pitfall linter (see docs/analysis.md)")
+    ap.add_argument("--passes", default="all",
+                    help="comma-separated subset of "
+                         f"{','.join(PASSES)} (default: all)")
+    ap.add_argument("--root", default=".",
+                    help="repo root (containing src/ and the baseline)")
+    ap.add_argument("--baseline", default=None,
+                    help="baseline file (default: <root>/"
+                         "ANALYSIS_BASELINE.json)")
+    ap.add_argument("--json", dest="json_out", default=None,
+                    help="also write findings as JSON to this path")
+    args = ap.parse_args(argv)
+
+    root = pathlib.Path(args.root).resolve()
+    baseline_path = pathlib.Path(args.baseline) if args.baseline \
+        else root / "ANALYSIS_BASELINE.json"
+    baseline = F.load_baseline(baseline_path)
+
+    names = PASSES if args.passes == "all" else \
+        tuple(p.strip() for p in args.passes.split(",") if p.strip())
+    all_findings = []
+    timings = {}
+    for name in names:
+        t0 = time.perf_counter()
+        got = run_pass(name, root)
+        timings[name] = time.perf_counter() - t0
+        all_findings.extend(got)
+
+    unbaselined, baselined, stale = F.apply(all_findings, baseline)
+
+    for f, reason in baselined:
+        print(f.render(reason=reason))
+    for f in unbaselined:
+        print(f.render())
+    for key in stale:
+        print(f"[stale-baseline] {key}: baseline entry matched no "
+              "finding -- delete it")
+
+    if args.json_out:
+        pathlib.Path(args.json_out).write_text(json.dumps({
+            "unbaselined": [f.to_dict() for f in unbaselined],
+            "baselined": [dict(f.to_dict(), reason=r)
+                          for f, r in baselined],
+            "stale_baseline_keys": stale,
+            "timings_s": {k: round(v, 3) for k, v in timings.items()},
+        }, indent=2) + "\n")
+
+    per_pass = ", ".join(f"{k} {v:.1f}s" for k, v in timings.items())
+    print(f"repro.analysis: {len(all_findings)} finding(s) "
+          f"({len(baselined)} baselined, {len(unbaselined)} new, "
+          f"{len(stale)} stale baseline entr{'y' if len(stale) == 1 else 'ies'}) "
+          f"[{per_pass}]")
+    if unbaselined:
+        print("FAIL: unbaselined findings -- fix them or add a "
+              f"reasoned entry to {baseline_path.name}")
+        return 1
+    print("ok")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,121 @@
+"""Audits over the BENCH_*.json files ci.sh emits.
+
+Previously these lived as inline ``python - <<'PY'`` heredocs in
+``ci.sh`` -- unimportable, untested, and with the audit rules scattered
+across shell.  Each audit here takes the parsed JSON dict and returns a
+list of violation strings (empty = pass), so the rules are unit-tested
+and evolve in one place; ``ci.sh`` shrinks to one
+``python -m repro.analysis.bench_audit <file>`` call per BENCH file.
+
+  audit_agg           BENCH_agg.json: the traffic audit must cover both
+                      kernel paths, every audited stream must be
+                      N-independent, the K=256 two-pass smoke row and
+                      the IRLS-depth sweep must be present.
+  audit_large_cohort  BENCH_large_cohort.json: at least one scenario
+                      must have run the two-pass kernel, within the
+                      modeled VMEM budget, and only where the
+                      single-pass model genuinely overflows it.
+
+The file kind is inferred from the filename (``--kind`` overrides).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+from typing import Callable, Dict, List
+
+
+def audit_agg(bench: dict) -> List[str]:
+    """BENCH_agg.json invariants (was the first ci.sh heredoc)."""
+    errors: List[str] = []
+    audit = bench.get("traffic_audit") or []
+    paths = {a.get("path") for a in audit}
+    if not paths >= {"single", "two_pass"}:
+        errors.append(f"traffic audit paths incomplete: {sorted(paths)} "
+                      "(need both 'single' and 'two_pass')")
+    for a in audit:
+        if not a.get("n_independent"):
+            errors.append(
+                f"N-dependent input stream in traffic audit entry "
+                f"{a.get('name', a)}")
+    rows = bench.get("rows") or []
+    if not any(str(r.get("name", "")).startswith(
+            "agg/mm_pallas_two_pass/K256") for r in rows):
+        errors.append("missing K=256 two-pass smoke row")
+    if not bench.get("irls_sweep"):
+        errors.append("missing IRLS-depth sweep")
+    return errors
+
+
+def audit_large_cohort(bench: dict) -> List[str]:
+    """BENCH_large_cohort.json invariants (was the second heredoc)."""
+    from repro.kernels import mm_aggregate as mk
+    errors: List[str] = []
+    rows = bench.get("rows") or []
+    two = [r for r in rows
+           if (r.get("launch_audit") or {}).get("path") == "two_pass"]
+    if not two:
+        errors.append("no two-pass scenario in the large-cohort family")
+    for r in two:
+        a = r["launch_audit"]
+        if a["vmem_bytes"] > mk.VMEM_BUDGET_BYTES:
+            errors.append(
+                f"{r.get('name')}: two-pass working set {a['vmem_bytes']} "
+                f"bytes exceeds the VMEM budget {mk.VMEM_BUDGET_BYTES}")
+        if mk.single_pass_vmem_bytes(a["k_pad"], a["n_out"],
+                                     a["block_m"]) <= mk.VMEM_BUDGET_BYTES:
+            errors.append(
+                f"{r.get('name')}: two-pass engaged where the "
+                "single-pass model fits the budget")
+    return errors
+
+
+AUDITS: Dict[str, Callable[[dict], List[str]]] = {
+    "agg": audit_agg,
+    "large_cohort": audit_large_cohort,
+}
+
+
+def infer_kind(path) -> str:
+    name = pathlib.Path(path).name.lower()
+    if "large_cohort" in name:
+        return "large_cohort"
+    if "agg" in name:
+        return "agg"
+    raise ValueError(
+        f"cannot infer audit kind from {path!r}; pass --kind "
+        f"({sorted(AUDITS)})")
+
+
+def audit_file(path, kind: str = None) -> List[str]:
+    kind = kind or infer_kind(path)
+    bench = json.loads(pathlib.Path(path).read_text())
+    return AUDITS[kind](bench)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis.bench_audit",
+        description="Audit a BENCH_*.json file emitted by ci.sh")
+    ap.add_argument("files", nargs="+", help="BENCH json file(s)")
+    ap.add_argument("--kind", choices=sorted(AUDITS), default=None,
+                    help="override the filename-inferred audit kind")
+    args = ap.parse_args(argv)
+    failed = False
+    for f in args.files:
+        errors = audit_file(f, args.kind)
+        if errors:
+            failed = True
+            print(f"{f}: FAIL")
+            for e in errors:
+                print(f"  - {e}")
+        else:
+            print(f"{f}: audit ok")
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,238 @@
+"""Jaxpr/HLO auditor: structural invariants of the *traced* programs.
+
+Where the contract checker audits static launch geometry, this pass
+traces the real programs -- ``AggregationEngine.aggregate`` /
+``aggregate_batched`` / ``aggregate_tree`` and the scenario runner's
+``lax.scan`` executables (``runner.trace_spec``) -- and walks their
+jaxprs (recursing through scan/pjit/cond/while sub-jaxprs) to assert:
+
+  pallas-count    exactly one ``pallas_call`` equation per engine
+                  launch / tree layout: the whole-pytree path must
+                  stage into ONE kernel launch, and a scenario's scan
+                  body must aggregate through one launch per step (a
+                  second pallas_call means the one-residency batching
+                  regressed to per-column or per-leaf launches).
+  callback        zero ``pure_callback`` / ``io_callback`` /
+                  ``debug_callback`` equations in steady paths --
+                  a host callback inside the scan serializes every
+                  step on the host.
+  bf16-stream     a bf16 update stream enters the pallas_call as bf16
+                  (the kernel upcasts per-tile in VMEM); an f32
+                  ``convert_element_type`` *before* the call doubles
+                  the modeled HBM input traffic silently.
+  donation        ``donate_leaves=True`` is actually reflected in the
+                  lowered tree program's donated buffers
+                  (``Lowered.args_info``) -- and never leaks into the
+                  non-donating program.
+
+All tracing is abstract (``jax.make_jaxpr`` / AOT ``.lower``): nothing
+is compiled or executed, so the pass runs in CI in seconds.
+"""
+
+from __future__ import annotations
+
+import collections
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis.findings import Finding
+
+CALLBACK_PRIMS = ("pure_callback", "io_callback", "debug_callback")
+
+
+# ---------------------------------------------------------------------------
+# jaxpr walking
+# ---------------------------------------------------------------------------
+
+def iter_eqns(jaxpr):
+    """All equations of ``jaxpr``, recursing into sub-jaxprs carried in
+    equation params (scan/while bodies, pjit/cond/remat branches)."""
+    for eqn in jaxpr.eqns:
+        yield eqn
+        for v in eqn.params.values():
+            vs = v if isinstance(v, (list, tuple)) else (v,)
+            for s in vs:
+                if hasattr(s, "eqns"):            # Jaxpr
+                    yield from iter_eqns(s)
+                elif hasattr(s, "jaxpr"):         # ClosedJaxpr
+                    yield from iter_eqns(s.jaxpr)
+
+
+def primitive_counts(closed_jaxpr) -> collections.Counter:
+    """Recursive primitive histogram of a (closed) jaxpr."""
+    jaxpr = getattr(closed_jaxpr, "jaxpr", closed_jaxpr)
+    return collections.Counter(e.primitive.name for e in iter_eqns(jaxpr))
+
+
+def _pallas_eqns(closed_jaxpr):
+    jaxpr = getattr(closed_jaxpr, "jaxpr", closed_jaxpr)
+    return [e for e in iter_eqns(jaxpr) if e.primitive.name == "pallas_call"]
+
+
+# ---------------------------------------------------------------------------
+# program-level checks
+# ---------------------------------------------------------------------------
+
+def audit_program(closed_jaxpr, *, where: str, path: str = "engine",
+                  expect_pallas: Optional[int] = None,
+                  forbid_callbacks: bool = True,
+                  stream_dtype=None) -> List[Finding]:
+    """Audit one traced program.
+
+    ``expect_pallas``   exact required number of pallas_call equations
+    ``forbid_callbacks``  no callback primitive anywhere in the program
+    ``stream_dtype``    required dtype of every pallas_call's update
+                        stream operand AND its estimate output (the
+                        bf16 no-silent-upcast contract)
+    """
+    out: List[Finding] = []
+    counts = primitive_counts(closed_jaxpr)
+
+    if forbid_callbacks:
+        for prim in counts:
+            if any(cb in prim for cb in CALLBACK_PRIMS):
+                out.append(Finding(
+                    rule="callback", path=path, where=where,
+                    detail=f"{counts[prim]} {prim} equation(s) in a "
+                           "steady path: host callbacks serialize every "
+                           "step on the host", ident=prim))
+
+    n_pallas = counts.get("pallas_call", 0)
+    if expect_pallas is not None and n_pallas != expect_pallas:
+        out.append(Finding(
+            rule="pallas-count", path=path, where=where,
+            detail=f"{n_pallas} pallas_call equation(s), expected "
+                   f"{expect_pallas} (one launch per engine call / tree "
+                   "layout; more means batching regressed, zero means "
+                   "the kernel path silently fell back)"))
+
+    if stream_dtype is not None:
+        want = jnp.dtype(stream_dtype)
+        for eqn in _pallas_eqns(closed_jaxpr):
+            in_dtypes = [v.aval.dtype for v in eqn.invars]
+            out_dtypes = [v.aval.dtype for v in eqn.outvars]
+            if not any(d == want for d in in_dtypes):
+                out.append(Finding(
+                    rule="bf16-stream", path=path, where=where,
+                    detail=f"no pallas_call operand has dtype {want}: "
+                           f"the {want} update stream was upcast before "
+                           "the kernel (inputs "
+                           f"{[str(d) for d in in_dtypes]}), re-inflating "
+                           "HBM input traffic", ident="input"))
+            if not any(d == want for d in out_dtypes):
+                out.append(Finding(
+                    rule="bf16-stream", path=path, where=where,
+                    detail=f"pallas_call writes {[str(d) for d in out_dtypes]}"
+                           f" back instead of the stream dtype {want}",
+                    ident="output"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# the audited targets: engine programs + scenario executables
+# ---------------------------------------------------------------------------
+
+def _engine(**kw):
+    from repro.kernels import ops
+    return ops.AggregationEngine(interpret=True, **kw)
+
+
+def check_engine() -> List[Finding]:
+    """Trace the engine's three entry points (f32 and bf16 streams)."""
+    out: List[Finding] = []
+    eng = _engine()
+
+    x32 = jnp.zeros((8, 300), jnp.float32)
+    jx = jax.make_jaxpr(lambda x: eng.aggregate(x))(x32)
+    out.extend(audit_program(jx, where="aggregate/K8xM300xf32",
+                             expect_pallas=1))
+
+    a = jnp.full((8, 4), 0.25, jnp.float32)
+    jx = jax.make_jaxpr(lambda x: eng.aggregate_batched(x, a))(x32)
+    out.extend(audit_program(jx, where="aggregate_batched/K8xM300xN4",
+                             expect_pallas=1))
+
+    x16 = jnp.zeros((8, 300), jnp.bfloat16)
+    jx = jax.make_jaxpr(lambda x: eng.aggregate(x))(x16)
+    out.extend(audit_program(jx, where="aggregate/K8xM300xbf16",
+                             expect_pallas=1, stream_dtype=jnp.bfloat16))
+
+    tree = {"w": jnp.zeros((8, 32)), "b": jnp.zeros((8, 7, 3))}
+    jx = jax.make_jaxpr(lambda t: eng.aggregate_tree(t))(tree)
+    out.extend(audit_program(jx, where="aggregate_tree/2-leaves",
+                             expect_pallas=1))
+
+    # two-pass path: the K-major kernel is still exactly one launch
+    eng2 = _engine(path="two_pass")
+    x2 = jnp.zeros((128, 256), jnp.float32)
+    jx = jax.make_jaxpr(lambda x: eng2.aggregate(x))(x2)
+    out.extend(audit_program(jx, where="aggregate/K128/two_pass",
+                             expect_pallas=1))
+    return out
+
+
+def check_donation() -> List[Finding]:
+    """``donate_leaves`` must reach the lowered program's args_info."""
+    out: List[Finding] = []
+    tree = {"w": jnp.zeros((8, 32)), "b": jnp.zeros((8, 7, 3))}
+
+    def donated_flags(lowered):
+        leaves = jax.tree.leaves(
+            lowered.args_info,
+            is_leaf=lambda x: hasattr(x, "donated"))
+        return [bool(a.donated) for a in leaves if hasattr(a, "donated")]
+
+    flags = donated_flags(_engine(donate_leaves=True).lower_tree(tree))
+    if not flags or not all(flags):
+        out.append(Finding(
+            rule="donation", path="engine", where="lower_tree/donated",
+            detail="donate_leaves=True but the lowered tree program "
+                   f"marks donated={flags}: the leaf buffers are not "
+                   "donated to the staging scatter"))
+    flags = donated_flags(_engine().lower_tree(tree))
+    if any(flags):
+        out.append(Finding(
+            rule="donation", path="engine", where="lower_tree/plain",
+            detail=f"donate_leaves=False but donated={flags}: the "
+                   "non-donating program would poison caller-held "
+                   "gradient buffers"))
+    return out
+
+
+def scenario_specs():
+    """Tiny pallas-backend specs covering the linear steady paths."""
+    from repro.scenarios.spec import ScenarioSpec
+    return (
+        ScenarioSpec(paradigm="diffusion", backend="pallas",
+                     num_agents=5, dim=4, num_steps=2,
+                     attack="additive", num_malicious=1),
+        ScenarioSpec(paradigm="federated", backend="pallas",
+                     num_agents=6, dim=4, num_steps=2,
+                     attack="sign_flip", num_malicious=1),
+    )
+
+
+def check_scenarios(specs=None) -> List[Finding]:
+    """Trace the scan programs the scenario runner would launch."""
+    from repro.scenarios import runner
+    out: List[Finding] = []
+    for spec in (scenario_specs() if specs is None else specs):
+        jaxpr, records = runner.trace_spec(spec)
+        n_layouts = len([r for r in records if r["backend"] == "pallas"])
+        out.extend(audit_program(
+            jaxpr, path="scenario", where=spec.label(),
+            expect_pallas=max(n_layouts, 1)))
+        if not records:
+            out.append(Finding(
+                rule="pallas-count", path="scenario", where=spec.label(),
+                detail="tracing resolved no engine workloads: the spec's "
+                       "aggregation bypassed the engine entirely",
+                ident="no-workloads"))
+    return out
+
+
+def check_all() -> List[Finding]:
+    """The jaxpr_audit pass."""
+    return check_engine() + check_donation() + check_scenarios()

@@ -1,0 +1,453 @@
+"""Repo-specific AST lint pass for JAX pitfalls.
+
+Pure-AST rules over ``src/`` (no imports, no tracing), each targeting a
+failure mode that bites this codebase specifically:
+
+  traced-branch    Python ``if``/``while`` on a traced value inside a
+                   jit-compiled function (non-static parameter) or a
+                   Pallas kernel body (``*_ref`` parameter): raises
+                   ``TracerBoolConversionError`` at best, silently
+                   specializes at worst.
+  host-sync        ``.item()`` / ``float(x)`` / ``int(x)`` /
+                   ``bool(x)`` / ``np.*(x)`` / ``jax.device_get`` on a
+                   traced parameter inside jit or kernel scope: a
+                   device->host sync (or a trace-time constant bake) in
+                   the hot path.
+  spec-dataclass   a ``*Spec`` / ``*Config`` dataclass that is not
+                   ``frozen=True``, or carries a mutable default /
+                   mutable ``default_factory``: these classes key jit
+                   static args and caches, so unhashable or mutable
+                   state is a silent-recompile (or wrong-cache-hit)
+                   hazard.
+  mutable-default  a mutable default argument (``[]`` / ``{}`` /
+                   ``set()`` / ``dict()`` / ``list()``) anywhere.
+  import-time-jnp  a ``jnp.*`` computation at module import time:
+                   allocates device memory / primes a backend on
+                   import (``jnp.dtype`` and other metadata-only
+                   helpers are exempt).
+
+Jit scope is detected from ``@jax.jit`` / ``@partial(jax.jit,
+static_argnames=...)`` decorators AND the assignment form
+``name = jax.jit(fn, static_argnames=...)``; parameters named in
+``static_argnames`` are concrete and free to branch on.  Kernel scope
+is any function with a ``*_ref`` parameter or a ``*_kernel`` name.
+
+Findings are keyed without line numbers (rule:path:function:ident) so
+``ANALYSIS_BASELINE.json`` entries survive unrelated edits.
+"""
+
+from __future__ import annotations
+
+import ast
+import pathlib
+from typing import Dict, List, Optional, Set
+
+from repro.analysis.findings import Finding
+
+NUMPY_ALIASES = ("np", "numpy")
+STATIC_ATTRS = ("shape", "ndim", "dtype", "size", "itemsize")
+STATIC_CALLS = ("isinstance", "len", "getattr", "hasattr", "type")
+MUTABLE_CONSTRUCTORS = ("list", "dict", "set")
+# metadata-only jnp helpers that are safe at import time
+IMPORT_TIME_JNP_OK = ("dtype",)
+SPEC_CLASS_SUFFIXES = ("Spec", "Config")
+
+RULES = {
+    "traced-branch": "Python branch on a traced value in jit/kernel scope",
+    "host-sync": "host sync / trace-time constant bake in jit/kernel scope",
+    "spec-dataclass": "*Spec/*Config dataclass not frozen or not hashable",
+    "mutable-default": "mutable default argument",
+    "import-time-jnp": "jnp computation at module import time",
+}
+
+
+def _attr_chain(node) -> Optional[str]:
+    """Dotted name of an attribute/name chain, e.g. ``jax.numpy.zeros``."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def _is_jax_jit(node) -> bool:
+    return _attr_chain(node) in ("jax.jit", "jit")
+
+
+def _static_argnames(call: ast.Call) -> Set[str]:
+    """String static_argnames of a ``jax.jit``/``partial(jax.jit, ...)``
+    call node (best effort: only literal str/tuple-of-str forms; a
+    computed value falls back to 'nothing is static', i.e. stricter)."""
+    for kw in call.keywords:
+        if kw.arg != "static_argnames":
+            continue
+        v = kw.value
+        if isinstance(v, ast.Constant) and isinstance(v.value, str):
+            return {v.value}
+        if isinstance(v, (ast.Tuple, ast.List)):
+            return {e.value for e in v.elts
+                    if isinstance(e, ast.Constant)
+                    and isinstance(e.value, str)}
+        if isinstance(v, ast.Name):
+            return {"__DYNAMIC__", v.id}   # resolved by module scan
+    return set()
+
+
+class _Module:
+    """Per-file context: import aliases, jit-assignment map, constants."""
+
+    def __init__(self, tree: ast.Module):
+        self.np_aliases: Set[str] = set()
+        self.jnp_aliases: Set[str] = set()
+        self.partial_aliases: Set[str] = {"functools.partial", "partial"}
+        # fn name -> static_argnames, from `x = jax.jit(fn, ...)`
+        self.jit_assigned: Dict[str, Set[str]] = {}
+        self.str_tuple_constants: Dict[str, Set[str]] = {}
+
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Import):
+                for a in node.names:
+                    name = a.asname or a.name
+                    if a.name == "numpy":
+                        self.np_aliases.add(name)
+                    elif a.name == "jax.numpy":
+                        self.jnp_aliases.add(name)
+            elif isinstance(node, ast.ImportFrom):
+                for a in node.names:
+                    if node.module == "jax" and a.name == "numpy":
+                        self.jnp_aliases.add(a.asname or "numpy")
+
+        for node in tree.body:
+            if isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                    and isinstance(node.targets[0], ast.Name):
+                tgt = node.targets[0].id
+                v = node.value
+                if isinstance(v, (ast.Tuple, ast.List)) and all(
+                        isinstance(e, ast.Constant)
+                        and isinstance(e.value, str) for e in v.elts):
+                    self.str_tuple_constants[tgt] = {
+                        e.value for e in v.elts}
+                if isinstance(v, ast.Call) and _is_jax_jit(v.func) \
+                        and v.args and isinstance(v.args[0], ast.Name):
+                    statics = _static_argnames(v)
+                    if "__DYNAMIC__" in statics:
+                        statics = self._resolve_dynamic(statics)
+                    prev = self.jit_assigned.get(v.args[0].id, set())
+                    self.jit_assigned[v.args[0].id] = prev | statics
+
+    def _resolve_dynamic(self, statics: Set[str]) -> Set[str]:
+        out = set()
+        for s in statics:
+            if s == "__DYNAMIC__":
+                continue
+            out |= self.str_tuple_constants.get(s, set())
+        return out
+
+
+def _jit_statics_from_decorators(fn: ast.FunctionDef,
+                                 mod: _Module) -> Optional[Set[str]]:
+    """None if ``fn`` is not jit-decorated, else its static argnames."""
+    for dec in fn.decorator_list:
+        if _is_jax_jit(dec):
+            return set()
+        if isinstance(dec, ast.Call):
+            if _is_jax_jit(dec.func):
+                statics = _static_argnames(dec)
+                return mod._resolve_dynamic(statics) \
+                    if "__DYNAMIC__" in statics else statics
+            if _attr_chain(dec.func) in mod.partial_aliases and dec.args \
+                    and _is_jax_jit(dec.args[0]):
+                statics = _static_argnames(dec)
+                return mod._resolve_dynamic(statics) \
+                    if "__DYNAMIC__" in statics else statics
+    if fn.name in mod.jit_assigned:
+        return mod.jit_assigned[fn.name]
+    return None
+
+
+def _param_names(fn: ast.FunctionDef) -> List[str]:
+    a = fn.args
+    params = [p.arg for p in a.posonlyargs + a.args + a.kwonlyargs]
+    if a.vararg:
+        params.append(a.vararg.arg)
+    if a.kwarg:
+        params.append(a.kwarg.arg)
+    return params
+
+
+def _dynamic_refs(expr, traced: Set[str]) -> List[str]:
+    """Traced names used *as values* in ``expr`` -- skipping static
+    metadata (``.shape``/``.dtype``/...), ``isinstance``/``len``-style
+    introspection, and ``is (not) None`` checks."""
+    refs: List[str] = []
+
+    def visit(node):
+        if isinstance(node, ast.Attribute) and node.attr in STATIC_ATTRS:
+            return
+        if isinstance(node, ast.Call):
+            fn_name = _attr_chain(node.func)
+            if fn_name in STATIC_CALLS:
+                return
+        if isinstance(node, ast.Compare):
+            if all(isinstance(op, (ast.Is, ast.IsNot)) for op in node.ops) \
+                    and all(isinstance(c, ast.Constant)
+                            for c in node.comparators):
+                return
+        if isinstance(node, ast.Name):
+            if node.id in traced:
+                refs.append(node.id)
+            return
+        for child in ast.iter_child_nodes(node):
+            visit(child)
+
+    visit(expr)
+    return refs
+
+
+def _mutable_default(node) -> bool:
+    if isinstance(node, (ast.List, ast.Dict, ast.Set)):
+        return True
+    if isinstance(node, ast.Call):
+        chain = _attr_chain(node.func)
+        return chain in MUTABLE_CONSTRUCTORS and not node.args \
+            and not node.keywords
+    return False
+
+
+class _Linter(ast.NodeVisitor):
+    def __init__(self, relpath: str, mod: _Module):
+        self.relpath = relpath
+        self.mod = mod
+        self.findings: List[Finding] = []
+        self._qual: List[str] = []
+        # innermost enclosing traced scope: (traced param names, kind)
+        self._scope: List[tuple] = []
+
+    def _emit(self, rule: str, where: str, detail: str, ident: str,
+              line: int) -> None:
+        self.findings.append(Finding(
+            rule=rule, path=self.relpath, where=where, detail=detail,
+            ident=ident, line=line))
+
+    @property
+    def _here(self) -> str:
+        return ".".join(self._qual) or "<module>"
+
+    # -- functions ---------------------------------------------------------
+
+    def visit_FunctionDef(self, node: ast.FunctionDef) -> None:
+        params = _param_names(node)
+        statics = _jit_statics_from_decorators(node, self.mod)
+        refs = [p for p in params if p.endswith("_ref")]
+        is_kernel = bool(refs) or node.name.endswith("_kernel")
+
+        # mutable defaults: everywhere, traced scope or not
+        defaults = list(node.args.defaults) + [
+            d for d in node.args.kw_defaults if d is not None]
+        named = (node.args.posonlyargs + node.args.args)[
+            len(node.args.posonlyargs + node.args.args)
+            - len(node.args.defaults):]
+        names = [p.arg for p in named] + [
+            p.arg for p, d in zip(node.args.kwonlyargs,
+                                  node.args.kw_defaults) if d is not None]
+        for name, d in zip(names, defaults):
+            if _mutable_default(d):
+                self._emit(
+                    "mutable-default", f"{self._here}.{node.name}",
+                    f"parameter {name!r} defaults to a mutable "
+                    f"{ast.dump(d)[:40]}: shared across calls",
+                    ident=name, line=d.lineno)
+
+        traced: Set[str] = set()
+        if statics is not None:
+            traced = set(params) - statics - {"self", "cls"}
+        elif is_kernel:
+            traced = set(refs)
+
+        self._qual.append(node.name)
+        if traced:
+            self._scope.append((traced, "kernel" if is_kernel else "jit"))
+            self.generic_visit(node)
+            self._scope.pop()
+        else:
+            self.generic_visit(node)
+        self._qual.pop()
+
+    visit_AsyncFunctionDef = visit_FunctionDef
+
+    # -- traced-branch -----------------------------------------------------
+
+    def _check_branch(self, node, kind: str) -> None:
+        if not self._scope:
+            return
+        traced, scope_kind = self._scope[-1]
+        refs = _dynamic_refs(node.test, traced)
+        if refs:
+            self._emit(
+                "traced-branch", self._here,
+                f"Python `{kind}` on traced value(s) {sorted(set(refs))} "
+                f"inside {scope_kind} scope: use lax.cond/select or "
+                "pl.when, or mark the argument static",
+                ident=f"{kind}-{'-'.join(sorted(set(refs)))}",
+                line=node.lineno)
+
+    def visit_If(self, node: ast.If) -> None:
+        self._check_branch(node, "if")
+        self.generic_visit(node)
+
+    def visit_While(self, node: ast.While) -> None:
+        self._check_branch(node, "while")
+        self.generic_visit(node)
+
+    # -- host-sync ---------------------------------------------------------
+
+    def visit_Call(self, node: ast.Call) -> None:
+        if self._scope:
+            traced, _kind = self._scope[-1]
+            chain = _attr_chain(node.func) or ""
+            root = chain.split(".")[0] if chain else ""
+            args_refs = [r for a in node.args + [k.value
+                                                for k in node.keywords]
+                         for r in _dynamic_refs(a, traced)]
+            if isinstance(node.func, ast.Attribute) \
+                    and node.func.attr == "item" and not node.args:
+                self._emit(
+                    "host-sync", self._here,
+                    ".item() forces a device->host sync",
+                    ident="item", line=node.lineno)
+            elif chain in ("jax.device_get",) and args_refs:
+                self._emit(
+                    "host-sync", self._here,
+                    f"jax.device_get on traced {sorted(set(args_refs))}",
+                    ident="device_get", line=node.lineno)
+            elif root in self.mod.np_aliases and args_refs:
+                self._emit(
+                    "host-sync", self._here,
+                    f"numpy call {chain} on traced "
+                    f"{sorted(set(args_refs))}: bakes a trace-time "
+                    "constant (or fails) instead of staying on device",
+                    ident=chain, line=node.lineno)
+            elif chain in ("float", "int", "bool") and args_refs:
+                self._emit(
+                    "host-sync", self._here,
+                    f"{chain}() on traced {sorted(set(args_refs))} "
+                    "forces concretization",
+                    ident=chain, line=node.lineno)
+        self.generic_visit(node)
+
+    # -- spec-dataclass ----------------------------------------------------
+
+    def visit_ClassDef(self, node: ast.ClassDef) -> None:
+        is_spec = node.name.endswith(SPEC_CLASS_SUFFIXES)
+        dc = None
+        for dec in node.decorator_list:
+            chain = _attr_chain(dec.func if isinstance(dec, ast.Call)
+                                else dec)
+            if chain in ("dataclasses.dataclass", "dataclass"):
+                dc = dec
+        if is_spec and dc is not None:
+            frozen = False
+            if isinstance(dc, ast.Call):
+                for kw in dc.keywords:
+                    if kw.arg == "frozen" and \
+                            isinstance(kw.value, ast.Constant):
+                        frozen = bool(kw.value.value)
+            if not frozen:
+                self._emit(
+                    "spec-dataclass", node.name,
+                    f"dataclass {node.name} is not frozen=True: "
+                    "spec-like classes key jit static args and caches; "
+                    "mutation after hashing is a silent-recompile / "
+                    "stale-cache hazard",
+                    ident="not-frozen", line=node.lineno)
+            for stmt in node.body:
+                if not isinstance(stmt, ast.AnnAssign) or stmt.value is None:
+                    continue
+                field = stmt.target.id if isinstance(stmt.target, ast.Name) \
+                    else "?"
+                v = stmt.value
+                bad = _mutable_default(v)
+                if isinstance(v, ast.Call) and \
+                        _attr_chain(v.func) in ("dataclasses.field", "field"):
+                    for kw in v.keywords:
+                        if kw.arg == "default_factory" and \
+                                _attr_chain(kw.value) in MUTABLE_CONSTRUCTORS:
+                            bad = True
+                if bad:
+                    self._emit(
+                        "spec-dataclass", node.name,
+                        f"field {field!r} has a mutable default: the "
+                        "instance is unhashable or aliases state across "
+                        "instances",
+                        ident=f"field-{field}", line=stmt.lineno)
+        self._qual.append(node.name)
+        self.generic_visit(node)
+        self._qual.pop()
+
+
+def _lint_import_time(tree: ast.Module, relpath: str,
+                      mod: _Module) -> List[Finding]:
+    """import-time-jnp: jnp calls evaluated when the module loads."""
+    findings: List[Finding] = []
+
+    def scan(body, where):
+        for node in body:
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue        # deferred to call time
+            if isinstance(node, ast.ClassDef):
+                scan(node.body, f"{where}{node.name}.")
+                continue
+            for call in ast.walk(node):
+                if not isinstance(call, ast.Call):
+                    continue
+                chain = _attr_chain(call.func)
+                if not chain:
+                    continue
+                root, _, rest = chain.partition(".")
+                if (root in mod.jnp_aliases or
+                        chain.startswith("jax.numpy.")) and \
+                        rest.split(".")[-1] not in IMPORT_TIME_JNP_OK:
+                    findings.append(Finding(
+                        rule="import-time-jnp", path=relpath,
+                        where=where.rstrip(".") or "<module>",
+                        detail=f"{chain}(...) runs at import time: "
+                               "allocates device memory / primes a "
+                               "backend before the program asked to",
+                        ident=chain, line=call.lineno))
+
+    scan(tree.body, "")
+    return findings
+
+
+def lint_file(path, root) -> List[Finding]:
+    p = pathlib.Path(path)
+    relpath = str(p.relative_to(root))
+    tree = ast.parse(p.read_text(), filename=str(p))
+    mod = _Module(tree)
+    linter = _Linter(relpath, mod)
+    linter.visit(tree)
+    return linter.findings + _lint_import_time(tree, relpath, mod)
+
+
+def lint_source(source: str, relpath: str = "<memory>") -> List[Finding]:
+    """Lint a source string (the mutation tests feed fixtures here)."""
+    tree = ast.parse(source)
+    mod = _Module(tree)
+    linter = _Linter(relpath, mod)
+    linter.visit(tree)
+    return linter.findings + _lint_import_time(tree, relpath, mod)
+
+
+def check_tree(root) -> List[Finding]:
+    """The lint pass: every ``*.py`` under ``<root>/src``."""
+    root = pathlib.Path(root)
+    src = root / "src"
+    if not src.is_dir():
+        raise FileNotFoundError(f"no src/ directory under {root}")
+    findings: List[Finding] = []
+    for p in sorted(src.rglob("*.py")):
+        findings.extend(lint_file(p, root))
+    return findings

@@ -1,7 +1,6 @@
 """The paper's own experiment (Sec. 4): K=32 agents, fully-connected,
 d=10 linear regression, sigma_v^2 = 0.01, step-size mu, REF-Diffusion
 with Tukey MM aggregation vs mean / median baselines."""
-import dataclasses
 
 NUM_AGENTS = 32
 DIM = 10

@@ -576,6 +576,73 @@ def launch_plan(k: int, m: int, n: int = 1, *,
     )
 
 
+class KernelCall(NamedTuple):
+    """The realized ``pallas_call`` configuration of one launch.
+
+    Built by ``kernel_call`` from a ``LaunchPlan`` -- the SAME code path
+    ``_launch`` uses to configure the pallas_call -- so the static
+    contract checker (``repro.analysis.contracts``) audits the kernel
+    that actually runs: BlockSpec index maps (one-residency / traffic),
+    scratch shapes (VMEM model), and the HBM output surface (two-pass
+    stats must never be an output).
+    """
+    kernel: object                  # the partial'd kernel body
+    grid: Tuple[int, int]
+    in_specs: Tuple[pl.BlockSpec, ...]   # (x values, a weight columns)
+    out_specs: pl.BlockSpec
+    out_shape: jax.ShapeDtypeStruct
+    scratch_shapes: Tuple[object, ...]   # pltpu.VMEM declarations
+
+    def scratch_bytes(self) -> int:
+        """Total bytes of the declared VMEM scratch buffers."""
+        total = 0
+        for s in self.scratch_shapes:
+            n = 1
+            for d in s.shape:
+                n *= int(d)
+            total += n * jnp.dtype(s.dtype).itemsize
+        return total
+
+
+def kernel_call(plan: LaunchPlan, *, k: int, dtype=jnp.float32,
+                num_iters: int = 10, c: float = mestimators.TUKEY_C95,
+                weighted: bool = True) -> KernelCall:
+    """Build the exact pallas_call configuration for ``plan``.
+
+    ``_launch`` runs precisely this configuration; exposing it as data
+    lets ``repro.analysis.contracts`` statically verify the launch plan
+    against the realized kernel without executing anything.
+    """
+    bk, k_pad, n_out = plan.block_k, plan.k_pad, plan.n_out
+    if plan.path == "two_pass":
+        kernel = functools.partial(
+            _mm_two_pass_kernel, k=k, block_k=bk, n_chunk=plan.n_chunk,
+            num_iters=num_iters, c=c, weighted=weighted)
+        scratch = (
+            pltpu.VMEM((k_pad, plan.block_m), jnp.float32),
+            pltpu.VMEM((plan.num_k_blocks, n_out, plan.block_m),
+                       jnp.float32),
+            pltpu.VMEM((plan.num_k_blocks, n_out, plan.block_m),
+                       jnp.float32),
+        )
+    else:
+        kernel = functools.partial(_mm_kernel, k=k, block_k=bk,
+                                   num_iters=num_iters, c=c,
+                                   weighted=weighted)
+        scratch = (pltpu.VMEM((k_pad, plan.block_m), jnp.float32),)
+    return KernelCall(
+        kernel=kernel,
+        grid=plan.grid,
+        in_specs=(
+            pl.BlockSpec((bk, plan.block_m), lambda mi, ki: (ki, mi)),
+            pl.BlockSpec((k_pad, n_out), lambda mi, ki: (0, 0)),
+        ),
+        out_specs=pl.BlockSpec((n_out, plan.block_m), lambda mi, ki: (0, mi)),
+        out_shape=jax.ShapeDtypeStruct((n_out, plan.m_total), dtype),
+        scratch_shapes=scratch,
+    )
+
+
 def _pad_inputs(
     x: jnp.ndarray, a: jnp.ndarray, *, plan: LaunchPlan
 ) -> Tuple[jnp.ndarray, jnp.ndarray, int]:
@@ -636,35 +703,16 @@ def _launch(
     plan = launch_plan(k, m, n_out, dtype=x.dtype,
                        block_m=block_m, block_k=block_k,
                        path=path, n_chunk=n_chunk)
-    xp, ap, bk = _pad_inputs(x, a, plan=plan)
-    k_pad, m_total = xp.shape
-
-    if plan.path == "two_pass":
-        kernel = functools.partial(
-            _mm_two_pass_kernel, k=k, block_k=bk, n_chunk=plan.n_chunk,
-            num_iters=num_iters, c=c, weighted=weighted)
-        scratch = [
-            pltpu.VMEM((k_pad, plan.block_m), jnp.float32),
-            pltpu.VMEM((plan.num_k_blocks, n_out, plan.block_m),
-                       jnp.float32),
-            pltpu.VMEM((plan.num_k_blocks, n_out, plan.block_m),
-                       jnp.float32),
-        ]
-    else:
-        kernel = functools.partial(_mm_kernel, k=k, block_k=bk,
-                                   num_iters=num_iters, c=c,
-                                   weighted=weighted)
-        scratch = [pltpu.VMEM((k_pad, plan.block_m), jnp.float32)]
+    xp, ap, _ = _pad_inputs(x, a, plan=plan)
+    call = kernel_call(plan, k=k, dtype=x.dtype, num_iters=num_iters, c=c,
+                       weighted=weighted)
     out = pl.pallas_call(
-        kernel,
-        grid=plan.grid,
-        in_specs=[
-            pl.BlockSpec((bk, plan.block_m), lambda mi, ki: (ki, mi)),
-            pl.BlockSpec((k_pad, n_out), lambda mi, ki: (0, 0)),
-        ],
-        out_specs=pl.BlockSpec((n_out, plan.block_m), lambda mi, ki: (0, mi)),
-        out_shape=jax.ShapeDtypeStruct((n_out, m_total), x.dtype),
-        scratch_shapes=scratch,
+        call.kernel,
+        grid=call.grid,
+        in_specs=list(call.in_specs),
+        out_specs=call.out_specs,
+        out_shape=call.out_shape,
+        scratch_shapes=list(call.scratch_shapes),
         interpret=interpret,
     )(xp, ap)
     return out[:, :m]

@@ -308,6 +308,21 @@ class AggregationEngine:
         layout = _TreeLayout(treedef, leaves)
         return self._layouts.setdefault(layout.key(), layout)
 
+    def _tree_call(self, tree, a):
+        """Resolve the exact jitted program + arguments the tree path
+        runs for ``tree``: (jitted fn, positional args, static kwargs,
+        layout).  Shared by ``aggregate_tree`` (which executes it) and
+        ``lower_tree`` (which AOT-lowers it for the jaxpr auditor)."""
+        leaves, treedef = jax.tree.flatten(tree)
+        layout = self._layout_for(leaves, treedef)
+        m_total = sum(layout.sizes)
+        opts = tuple(sorted(
+            self._opts(leaves[0], layout.k, m_total).items()))
+        fn = _agg_tree_flat_donated if self.donate_leaves else _agg_tree_flat
+        kwargs = dict(sizes=layout.sizes, offsets=layout.offsets,
+                      shapes=layout.shapes, dtypes=layout.dtypes, opts=opts)
+        return fn, (tuple(leaves), a), kwargs, layout
+
     def aggregate_tree(self, tree, a: Optional[jnp.ndarray] = None):
         """Aggregate a pytree of stacked (K, ...) leaves in ONE launch.
 
@@ -316,18 +331,22 @@ class AggregationEngine:
         one fused jit program per tree structure (see module docstring
         for the copy-free staging and donation semantics).
         """
-        leaves, treedef = jax.tree.flatten(tree)
-        if not leaves:
+        if not jax.tree.leaves(tree):
             return tree
-        layout = self._layout_for(leaves, treedef)
-        m_total = sum(layout.sizes)
-        opts = tuple(sorted(
-            self._opts(leaves[0], layout.k, m_total).items()))
-        fn = _agg_tree_flat_donated if self.donate_leaves else _agg_tree_flat
-        outs = fn(tuple(leaves), a, sizes=layout.sizes,
-                  offsets=layout.offsets, shapes=layout.shapes,
-                  dtypes=layout.dtypes, opts=opts)
+        fn, args, kwargs, layout = self._tree_call(tree, a)
+        outs = fn(*args, **kwargs)
         return jax.tree.unflatten(layout.treedef, list(outs))
+
+    def lower_tree(self, tree, a: Optional[jnp.ndarray] = None):
+        """AOT-lower (do not execute) the exact stage->kernel->split
+        program ``aggregate_tree`` would run -- same jit callable, same
+        static layout args, same donation setting.  Returns the jax
+        ``Lowered``; ``repro.analysis.jaxpr_audit`` uses it to verify
+        one-pallas_call-per-layout and that ``donate_leaves`` is
+        actually reflected in the lowered program's donated buffers
+        (``Lowered.args_info``)."""
+        fn, args, kwargs, _ = self._tree_call(tree, a)
+        return fn.lower(*args, **kwargs)
 
 
 @functools.lru_cache(maxsize=None)

@@ -55,7 +55,6 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import mm_aggregate as _mm
-from repro.kernels.mm_aggregate import next_pow2 as _next_pow2
 
 LANE = 128
 # the per-core VMEM budget lives with the kernel geometry model
@@ -186,24 +185,39 @@ def heuristic_blocks(k: int, m: int, n: int = 1,
                      dtype=jnp.float32) -> BlockChoice:
     """VMEM-budget fallback used when no autotune measurement is cached.
 
-    Working set per lane column (f32): the streamed x tile (~2 copies
-    through the sort), plus ~3 (K_pad2, N) planes for the carried
-    weights, the deviations and their sort temporaries.  Pick the
-    widest lane tile that fits the budget, clamped to [128, 1024] and
-    to the (lane-rounded) problem width so tiny M never over-pads.
+    The lane tile is sized against the kernel's own working-set models
+    (``mm_aggregate.single_pass_vmem_bytes`` / ``two_pass_vmem_bytes``
+    -- the same models ``launch_plan`` reports and ``repro.analysis``
+    audits), so the heuristic can never pick a geometry whose resolved
+    path overflows the budget by the model's own account.  Meshes below
+    the two-pass crossover take the widest single-pass tile that fits;
+    larger meshes get whichever path affords the wider tile -- in
+    practice the two-pass kernel, whose working set stays bounded in K
+    (``auto_path`` then resolves the path from the same models).
+    Clamped to [128, 1024] and to the (lane-rounded) problem width so
+    tiny M never over-pads; the K axis streams as one block on the
+    single-pass path while the two-pass path derives its own
+    power-of-two K block in mm_aggregate.
     """
-    p = _next_pow2(max(int(k), 2))
-    n = max(int(n), 1)
-    bytes_per_lane = p * (3 * n + 3) * 4
-    bm = _VMEM_BUDGET_BYTES // max(bytes_per_lane, 1)
-    bm = (bm // LANE) * LANE
-    bm = max(LANE, min(_MAX_BLOCK_M, bm))
+    k, n = int(k), max(int(n), 1)
     m_lanes = max(LANE, ((int(m) + LANE - 1) // LANE) * LANE)
-    bm = min(bm, m_lanes)
-    # stream the whole (small) K axis as one block on the single-pass
-    # path (a K-split only adds grid steps there); the two-pass path
-    # derives its own power-of-two K block in mm_aggregate
-    return bm, None
+    cap = min(_MAX_BLOCK_M, m_lanes)
+
+    def widest(model_bytes):
+        bm = cap
+        while bm > 0 and model_bytes(bm) > _VMEM_BUDGET_BYTES:
+            bm -= LANE
+        return bm
+
+    bm_single = widest(lambda bm: _mm.single_pass_vmem_bytes(k, n, bm))
+    if k < _mm._TWO_PASS_MIN_K:
+        # small meshes stay single-pass (bit-stable with the
+        # pre-two-pass kernel) even when the narrowest tile overflows
+        return max(LANE, bm_single), None
+    bk = _mm.two_pass_block_k(k)
+    bm_two = widest(lambda bm: _mm.two_pass_vmem_bytes(
+        k, n, bm, bk, _mm.two_pass_n_chunk(n, bm, bk)))
+    return max(LANE, bm_single, bm_two), None
 
 
 def get_blocks(k: int, m: int, n: int = 1, dtype=jnp.float32,

@@ -25,7 +25,6 @@ aggregation in inference.
 
 from __future__ import annotations
 
-import dataclasses
 import functools
 from typing import Optional
 

@@ -18,8 +18,6 @@ the robust-aggregating custom VJP) under the distributed launcher.
 
 from __future__ import annotations
 
-import dataclasses
-import functools
 from typing import Any, Callable, Optional, Tuple
 
 import jax

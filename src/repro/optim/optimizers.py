@@ -8,7 +8,7 @@ they shard identically (critical for the FSDP path).
 from __future__ import annotations
 
 import dataclasses
-from typing import NamedTuple, Optional
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp

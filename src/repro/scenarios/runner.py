@@ -332,6 +332,39 @@ def _validated_override(state0, w0, spec: ScenarioSpec):
     return jax.tree.unflatten(exp_def, out)
 
 
+def _lowered_state(spec: ScenarioSpec, w0=None):
+    """Resolve a spec through its paradigm adapter: (lowering, state0,
+    key) -- the pieces both ``run`` and ``trace_spec`` scan over."""
+    adapter = registry.get_paradigm(spec.paradigm)
+    low = registry.as_lowering(adapter(spec))
+    state0 = low.state0
+    if w0 is not None:
+        state0 = _validated_override(state0, w0, spec)
+    return low, state0, jax.random.key(spec.seed)
+
+
+def trace_spec(spec: ScenarioSpec, *, w0=None):
+    """Trace (do not compile or execute) the exact scan program
+    ``run(spec)`` launches.
+
+    Returns ``(closed_jaxpr, records)``: the program's jaxpr and the
+    engine workloads resolved while tracing (``ops.record_workloads``).
+    This is the executable handle ``repro.analysis.jaxpr_audit`` walks
+    to assert structural invariants (one pallas_call per tree layout,
+    no callbacks in the steady path) on the program a scenario really
+    runs -- not a reconstruction of it.
+    """
+    from repro.kernels import ops  # deferred: keep import light
+    low, state0, key = _lowered_state(spec, w0)
+
+    def _scan(s0, k):
+        return scan_loop(low.step_fn, s0, k, spec.num_steps)
+
+    with ops.record_workloads() as records:
+        jaxpr = jax.make_jaxpr(_scan)(state0, key)
+    return jaxpr, list(records)
+
+
 def run(spec: ScenarioSpec, *, w0=None) -> ScenarioResult:
     """Lower the spec through its paradigm adapter and run the scan.
 
@@ -348,12 +381,7 @@ def run(spec: ScenarioSpec, *, w0=None) -> ScenarioResult:
     executable is state-agnostic, so overrides hit the cache too).
     """
     from repro.kernels import ops  # deferred: keep import light
-    adapter = registry.get_paradigm(spec.paradigm)
-    low = registry.as_lowering(adapter(spec))
-    state0 = low.state0
-    if w0 is not None:
-        state0 = _validated_override(state0, w0, spec)
-    key = jax.random.key(spec.seed)
+    low, state0, key = _lowered_state(spec, w0)
 
     cache_key = _exec_cache_key(spec)
     cached = _EXEC_CACHE.get(cache_key)

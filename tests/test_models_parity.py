@@ -4,7 +4,6 @@ must reproduce full-sequence forward logits token by token."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs.base import ModelConfig
 from repro.models import layers as L
