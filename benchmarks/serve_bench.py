@@ -1,0 +1,112 @@
+"""Streaming-service benchmark: replay a federated spec's client
+traffic through ``repro.serve`` under chaos profiles and record what
+the service sustained.
+
+Per profile row (``repro.serve.scenario.ServeResult.to_row``):
+
+  * request latency p50/p95/p99 (simulated seconds, arrival -> commit)
+    and launch-wall percentiles (real seconds around the compiled
+    engine launch);
+  * sustained throughput: ``updates_per_sec`` of applied updates over
+    the real harness wall time;
+  * cohort-size and staleness histograms;
+  * per-fault-mode recovery counts (the chaos acceptance surface);
+  * ``post_warmup_cache_hit``: every post-warmup cohort ran the cached
+    executable -- the no-retrace contract of the serve loop;
+  * the pallas launch audit (geometry the engine actually resolved).
+
+``--json PATH`` writes BENCH_serve.json (audited by
+``repro.analysis.bench_audit``); ``--smoke`` shrinks rounds for ci.sh.
+Exits non-zero on any non-finite steady MSD, any broken-down profile,
+or an under-delivered replay.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+import jax
+
+from repro import compat
+from repro.scenarios.spec import ScenarioSpec
+from repro.serve import CHAOS_PROFILES, ServeConfig, replay
+
+DEFAULT_PROFILES = ("clean", "stragglers", "mixed")
+SMOKE_PROFILES = ("clean", "mixed")
+
+
+def run(profiles, *, rounds: int, backend: str, seed: int):
+    rows = []
+    for profile in profiles:
+        spec = ScenarioSpec(
+            name=f"serve-{profile}", paradigm="federated",
+            num_agents=16, dim=8, num_steps=rounds,
+            step_size=0.05, local_steps=3)
+        res = replay(spec, chaos=CHAOS_PROFILES[profile],
+                     serve=ServeConfig(k_min=8, deadline_s=1.0,
+                                       backend=backend),
+                     rounds=rounds, seed=seed)
+        row = res.to_row()
+        row["profile"] = profile
+        rows.append(row)
+        ok = (not row["broke_down"]
+              and row["rounds_completed"] == rounds
+              and all(v > 0 for v in row["recoveries"].values()))
+        print(f"{profile:12s} steady={row['steady_msd']:.5g} "
+              f"band={row['breakdown_level']:.3g} "
+              f"p50/p95/p99={row['latency_p50']:.3f}/"
+              f"{row['latency_p95']:.3f}/{row['latency_p99']:.3f} "
+              f"upd/s={row['updates_per_sec']:.1f} "
+              f"cache_hit={row['post_warmup_cache_hit']} ok={ok}")
+        if not ok:
+            print(f"FAIL: profile {profile} row unacceptable: "
+                  f"broke_down={row['broke_down']} "
+                  f"rounds={row['rounds_completed']}/{rounds} "
+                  f"recoveries={row['recoveries']}", file=sys.stderr)
+            sys.exit(1)
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="fewer rounds / profiles (ci.sh)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write BENCH_serve.json-style output")
+    ap.add_argument("--profiles", default=None,
+                    help="comma-separated chaos profiles "
+                         f"(default: {','.join(DEFAULT_PROFILES)})")
+    ap.add_argument("--rounds", type=int, default=None)
+    ap.add_argument("--backend", default="pallas",
+                    choices=("pallas", "jnp"))
+    ap.add_argument("--seed", type=int, default=0)
+    ns = ap.parse_args()
+
+    compat.enable_persistent_compilation_cache()
+    profiles = (tuple(ns.profiles.split(",")) if ns.profiles
+                else SMOKE_PROFILES if ns.smoke else DEFAULT_PROFILES)
+    for p in profiles:
+        if p not in CHAOS_PROFILES:
+            ap.error(f"unknown profile {p!r}; known: "
+                     f"{sorted(CHAOS_PROFILES)}")
+    rounds = ns.rounds if ns.rounds else (30 if ns.smoke else 60)
+    rows = run(profiles, rounds=rounds, backend=ns.backend, seed=ns.seed)
+
+    if ns.json:
+        payload = {
+            "bench": "serve",
+            "mode": "smoke" if ns.smoke else "full",
+            "backend": jax.default_backend(),
+            "engine_backend": ns.backend,
+            "rounds": rounds,
+            "rows": rows,
+        }
+        with open(ns.json, "w") as f:
+            json.dump(payload, f, indent=2)
+            f.write("\n")
+
+
+if __name__ == "__main__":
+    main()

@@ -50,3 +50,9 @@ python -m repro.analysis.bench_audit BENCH_large_cohort.json
 # robust train step through the same runner (pallas backend -> per-layout
 # launch audit); the sweep exits non-zero on non-finite loss.
 python examples/scenario_sweep.py --paradigm substrate --smoke
+# streaming-service smoke: a clean and a full-chaos replay through
+# repro.serve (pallas launch path, cached donated executables); the
+# audit fails on non-finite metrics, a broken-down profile, zero
+# fault-mode recoveries, or any post-warmup executable-cache miss.
+python benchmarks/serve_bench.py --smoke --json BENCH_serve.json
+python -m repro.analysis.bench_audit BENCH_serve.json

@@ -1,9 +1,10 @@
-"""Batched serving demo: prefill a batch of prompts, then greedy-decode
-with the KV-cache serve_step -- the path the decode_32k / long_500k
-dry-run shapes lower.
+"""Batched LM serving demo: prefill a batch of prompts, then greedy-
+decode with the KV-cache serve_step -- the path the decode_32k /
+long_500k dry-run shapes lower.  (For the streaming *aggregation*
+service demo see examples/serve_agg.py.)
 
-  PYTHONPATH=src python examples/serve.py --arch qwen3-0.6b --tokens 32
-  PYTHONPATH=src python examples/serve.py --arch rwkv6-1.6b   # O(1)-state
+  PYTHONPATH=src python examples/serve_lm.py --arch qwen3-0.6b --tokens 32
+  PYTHONPATH=src python examples/serve_lm.py --arch rwkv6-1.6b  # O(1)-state
 """
 
 import argparse

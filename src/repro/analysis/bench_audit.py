@@ -15,6 +15,13 @@ and evolve in one place; ``ci.sh`` shrinks to one
                       must have run the two-pass kernel, within the
                       modeled VMEM budget, and only where the
                       single-pass model genuinely overflows it.
+  audit_serve         BENCH_serve.json: a clean row AND at least one
+                      chaos row; every row finite, within its band,
+                      with latency percentiles and positive
+                      throughput, and ``post_warmup_cache_hit`` true
+                      (the serve loop compiled only at warmup); every
+                      injected fault mode must show a nonzero recovery
+                      count.
 
 The file kind is inferred from the filename (``--kind`` overrides).
 """
@@ -73,9 +80,53 @@ def audit_large_cohort(bench: dict) -> List[str]:
     return errors
 
 
+def audit_serve(bench: dict) -> List[str]:
+    """BENCH_serve.json invariants (the chaos acceptance surface)."""
+    errors: List[str] = []
+    rows = bench.get("rows") or []
+    if not rows:
+        return ["no serve rows"]
+    if not any(not r.get("fault_modes") for r in rows):
+        errors.append("no clean (fault-free) profile row")
+    if not any(r.get("fault_modes") for r in rows):
+        errors.append("no chaos profile row")
+    for r in rows:
+        name = r.get("profile") or r.get("scenario", "<row>")
+        for key in ("steady_msd", "latency_p50", "latency_p95",
+                    "latency_p99", "updates_per_sec"):
+            v = r.get(key)
+            if not isinstance(v, (int, float)) or v != v \
+                    or v in (float("inf"), float("-inf")):
+                errors.append(f"{name}: metric {key} non-finite "
+                              f"or missing: {v!r}")
+        if r.get("broke_down", True):
+            errors.append(f"{name}: served model broke out of the "
+                          f"scenario band (steady_msd="
+                          f"{r.get('steady_msd')} > "
+                          f"{r.get('breakdown_level')})")
+        if isinstance(r.get("updates_per_sec"), (int, float)) \
+                and not r["updates_per_sec"] > 0:
+            errors.append(f"{name}: zero sustained throughput")
+        if not r.get("post_warmup_cache_hit", False):
+            errors.append(
+                f"{name}: post-warmup executable-cache miss "
+                f"({r.get('post_warmup_misses')} misses): the steady "
+                "serve loop recompiled on an already-seen geometry")
+        if not r.get("rounds_completed"):
+            errors.append(f"{name}: no committed rounds")
+        recov = r.get("recoveries") or {}
+        for mode in r.get("fault_modes") or []:
+            if not recov.get(mode):
+                errors.append(
+                    f"{name}: injected fault mode {mode!r} shows no "
+                    f"recovery events (recoveries={recov})")
+    return errors
+
+
 AUDITS: Dict[str, Callable[[dict], List[str]]] = {
     "agg": audit_agg,
     "large_cohort": audit_large_cohort,
+    "serve": audit_serve,
 }
 
 
@@ -83,6 +134,8 @@ def infer_kind(path) -> str:
     name = pathlib.Path(path).name.lower()
     if "large_cohort" in name:
         return "large_cohort"
+    if "serve" in name:
+        return "serve"
     if "agg" in name:
         return "agg"
     raise ValueError(

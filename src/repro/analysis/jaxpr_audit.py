@@ -25,8 +25,13 @@ jaxprs (recursing through scan/pjit/cond/while sub-jaxprs) to assert:
                   (``Lowered.args_info``) -- and never leaks into the
                   non-donating program.
 
-All tracing is abstract (``jax.make_jaxpr`` / AOT ``.lower``): nothing
-is compiled or executed, so the pass runs in CI in seconds.
+  serve-retrace   a steady serve session (identical-geometry cohorts
+                  through ``repro.serve``) compiles exactly once and
+                  hits the executable cache on every later cohort.
+
+All tracing is abstract (``jax.make_jaxpr`` / AOT ``.lower``); only the
+serve-retrace check runs a tiny interpreted session (the executable
+cache is runtime state), so the pass still runs in CI in seconds.
 """
 
 from __future__ import annotations
@@ -233,6 +238,90 @@ def check_scenarios(specs=None) -> List[Finding]:
     return out
 
 
+def _serve_session():
+    """A tiny steady-state serve session on the interpreted pallas
+    path: three cohorts of identical geometry through one service."""
+    import numpy as np
+    from repro.serve.buffer import AgentUpdate
+    from repro.serve.clock import SimClock
+    from repro.serve.service import AggregationService, ServeConfig
+    svc = AggregationService(
+        np.zeros(16, np.float32),
+        config=ServeConfig(k_min=4, deadline_s=1.0, backend="pallas",
+                           interpret=True),
+        clock=SimClock())
+    seq = 0
+    for _ in range(3):
+        for agent in range(4):
+            seq += 1
+            svc.submit(AgentUpdate(
+                agent_id=agent, round=svc.round,
+                payload=np.full(16, 0.1, np.float32), seq=seq))
+    return svc
+
+
+def check_serve(session=None) -> List[Finding]:
+    """The serving contracts: the standalone launch program is one
+    pallas_call with no callbacks, ``donate`` reaches (only) the cohort
+    buffer, and a steady serve session never retraces -- cohorts of
+    identical geometry after the first must all hit the executable
+    cache (``session`` overrides the default 3-cohort session; the
+    mutation tests inject broken ones)."""
+    out: List[Finding] = []
+    eng = _engine()
+
+    # the launch program itself: one kernel, weights riding along
+    x = jnp.zeros((8, 64), jnp.float32)
+    a = jnp.ones((8,), jnp.float32)
+    jx = jax.make_jaxpr(lambda x_, a_: eng.aggregate(x_, a_))(x, a)
+    out.extend(audit_program(jx, path="serve", where="launch/K8xM64/weighted",
+                             expect_pallas=1))
+
+    # donation: the cohort buffer (arg 0) and nothing else
+    def donated_flags(lowered):
+        leaves = jax.tree.leaves(
+            lowered.args_info, is_leaf=lambda v: hasattr(v, "donated"))
+        return [bool(v.donated) for v in leaves if hasattr(v, "donated")]
+
+    flags = donated_flags(eng.lower_launch(8, 64, donate=True))
+    if not flags or not flags[0]:
+        out.append(Finding(
+            rule="donation", path="serve", where="lower_launch/donated",
+            detail=f"donate=True but donated={flags}: the cohort buffer "
+                   "is not donated to the launch"))
+    if any(flags[1:]):
+        out.append(Finding(
+            rule="donation", path="serve", where="lower_launch/donated",
+            detail=f"donated={flags}: only the cohort buffer (arg 0) may "
+                   "be donated", ident="extra"))
+    flags = donated_flags(eng.lower_launch(8, 64, donate=False))
+    if any(flags):
+        out.append(Finding(
+            rule="donation", path="serve", where="lower_launch/plain",
+            detail=f"donate=False but donated={flags}: the non-donating "
+                   "launch would poison caller-held cohort buffers"))
+
+    # steady loop: identical-geometry cohorts must never recompile.
+    # (this check executes a tiny interpreted session -- the executable
+    # cache is runtime state, not a traceable structure)
+    svc = _serve_session() if session is None else session
+    c = svc.telemetry.counters
+    commits = int(c["commits"])
+    misses = int(c["exec_cache_misses"])
+    hits = int(c["exec_cache_hits"])
+    if (commits < 3 or misses != 1 or hits != commits - 1
+            or svc.telemetry.post_warmup_misses):
+        out.append(Finding(
+            rule="serve-retrace", path="serve", where="session/3xK4",
+            detail=f"steady serve session: {commits} identical-geometry "
+                   f"cohorts -> {misses} compile(s), {hits} cache hit(s), "
+                   f"{svc.telemetry.post_warmup_misses} post-warmup "
+                   "miss(es); expected exactly one warmup compile and "
+                   "hits on every later cohort"))
+    return out
+
+
 def check_all() -> List[Finding]:
     """The jaxpr_audit pass."""
-    return check_engine() + check_donation() + check_scenarios()
+    return (check_engine() + check_donation() + check_scenarios()
+            + check_serve())

@@ -98,10 +98,12 @@ def _tukey(c: float):
             else mestimators.make_tukey(c))
 
 
-@functools.partial(jax.jit, static_argnames=(
-    "num_iters", "c", "block_m", "block_k", "interpret", "backend", "path"))
-def _agg_nd(x, a, *, num_iters, c, block_m, block_k, interpret, backend,
-            path=None):
+_AGG_STATICS = ("num_iters", "c", "block_m", "block_k", "interpret",
+                "backend", "path")
+
+
+def _agg_nd_impl(x, a, *, num_iters, c, block_m, block_k, interpret, backend,
+                 path=None):
     """(K, ...) -> (...), optional (K,) weights.
 
     The jnp backend never flattens trailing dims (the estimate is
@@ -120,6 +122,14 @@ def _agg_nd(x, a, *, num_iters, c, block_m, block_k, interpret, backend,
                              block_m=block_m, block_k=block_k,
                              interpret=interpret, path=path)
     return out.reshape(x.shape[1:])
+
+
+_agg_nd = jax.jit(_agg_nd_impl, static_argnames=_AGG_STATICS)
+# donating variant: the caller hands the stacked cohort buffer over to
+# the launch (a streaming service's assembled cohort is dead after the
+# aggregate), letting XLA write intermediates into its memory
+_agg_nd_donated = jax.jit(_agg_nd_impl, static_argnames=_AGG_STATICS,
+                          donate_argnums=(0,))
 
 
 @functools.partial(jax.jit, static_argnames=(
@@ -347,6 +357,31 @@ class AggregationEngine:
         (``Lowered.args_info``)."""
         fn, args, kwargs, _ = self._tree_call(tree, a)
         return fn.lower(*args, **kwargs)
+
+    # -- standalone launches (cohort assembly decoupled) -------------------
+
+    def lower_launch(self, k: int, m: int, dtype=jnp.float32, *,
+                     weighted: bool = True, donate: bool = False):
+        """AOT-lower the one-cohort launch program for a fixed geometry:
+        ``(x (k, m) dtype, a (k,) f32) -> (m,) dtype``.
+
+        This is the "kernel launch" half of an aggregation with the
+        "cohort assembly" half cut away: the caller owns staging the
+        per-agent updates into the ``(k, m)`` buffer (``repro.serve``
+        does it from a streaming admission buffer), compiles this
+        program ONCE per cohort geometry, and launches the compiled
+        executable for every admitted cohort -- no per-cohort retrace.
+        The workload resolution (tuning-cache winner or heuristic, the
+        single<->two-pass path) is identical to ``aggregate``'s and is
+        recorded for launch audits.  ``donate=True`` donates the cohort
+        buffer to the launch (it is dead after the aggregate); the
+        caller must re-stage on retry rather than re-use it.
+        """
+        x = jax.ShapeDtypeStruct((k, m), jnp.dtype(dtype))
+        opts = self._opts(x, k, m)
+        a = jax.ShapeDtypeStruct((k,), jnp.float32) if weighted else None
+        fn = _agg_nd_donated if donate else _agg_nd
+        return fn.lower(x, a, **opts)
 
 
 @functools.lru_cache(maxsize=None)

@@ -1,0 +1,40 @@
+"""`repro.serve`: fault-tolerant streaming aggregation service.
+
+Every other entry point in the repo is a batch call -- assemble a full
+(K, M) cohort, launch the engine, return.  A production parameter
+server never sees a synchronous cohort: updates arrive continuously,
+ragged, late, duplicated, and sometimes malicious.  This package is the
+long-lived counterpart:
+
+  clock       -- wall vs. deterministic simulated time
+  retry       -- jittered exponential backoff with a deadline budget
+  buffer      -- FedBuff-style admission buffer (dedup, supersede,
+                 staleness window, backpressure)
+  service     -- the aggregation loop: buffered cohorts, one compiled
+                 launch per cohort geometry (no per-cohort recompile),
+                 staleness-weighted admission, graceful degradation
+  telemetry   -- latency percentiles, throughput, histograms, recovery
+                 counters
+  chaos       -- deterministic fault injection (stragglers, dropout,
+                 duplicates, stale re-sends, byzantine payloads via the
+                 attack registry, engine launch faults)
+  scenario    -- replay a federated ``ScenarioSpec``'s traffic through
+                 the service under a simulated clock
+
+See docs/serving.md for the buffering policy, the staleness weighting,
+the fault matrix and the degradation ladder.
+"""
+
+from repro.serve.buffer import AgentUpdate, CohortBuffer
+from repro.serve.chaos import CHAOS_PROFILES, ChaosConfig, FaultInjected
+from repro.serve.clock import SimClock, WallClock
+from repro.serve.retry import RetryError, RetryPolicy
+from repro.serve.scenario import ServeResult, replay
+from repro.serve.service import AggregationService, CommitResult, ServeConfig
+
+__all__ = [
+    "AgentUpdate", "AggregationService", "CHAOS_PROFILES", "ChaosConfig",
+    "CohortBuffer", "CommitResult", "FaultInjected", "RetryError",
+    "RetryPolicy", "ServeConfig", "ServeResult", "SimClock", "WallClock",
+    "replay",
+]

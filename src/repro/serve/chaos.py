@@ -1,0 +1,156 @@
+"""Deterministic fault injection for the streaming service.
+
+One ``ChaosConfig`` describes everything that can go wrong between the
+agents and the committed model; the replay harness
+(``serve.scenario``) draws every fault from a single seeded generator
+under the simulated clock, so a chaos run is bit-for-bit reproducible.
+
+Fault matrix (see docs/serving.md for the defense each one lands on):
+
+  straggler     an affected agent's deliveries get an extra exponential
+                delay (mean ``straggler_delay_s``) -> arrives late with
+                a nonzero round age; admitted stale-downweighted or
+                rejected beyond the window
+  dropout       an affected agent stops sending for good at
+                ``dropout_after_frac`` of the run horizon -> the
+                service keeps committing from the survivors (deadline
+                admissions / degradation ladder)
+  duplicate     a delivery is replayed with the same sequence number ->
+                dropped by the buffer's duplicate gate
+  stale         an agent re-sends its *previous* update (fresh sequence
+                number, old round tag) -> staleness-weighted or
+                rejected
+  byzantine     an affected agent corrupts every payload through the
+                attack registry (per-agent attacks only: the collusion
+                attacks need sight of the benign cohort, which a
+                streaming client does not have) -> rejected by the MM
+                estimator's redescending loss
+  launch fault  the engine launch itself raises ``FaultInjected`` with
+                probability ``launch_fault_rate`` per attempt ->
+                absorbed by the retry/backoff policy
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional, Tuple
+
+import numpy as np
+
+from repro.core import attacks as _attacks
+
+PER_AGENT_ATTACKS = ("additive", "sign_flip", "gaussian", "zero", "scale")
+
+
+class FaultInjected(RuntimeError):
+    """An injected (synthetic) fault; retryable by construction."""
+
+
+@dataclasses.dataclass(frozen=True)
+class ChaosConfig:
+    """Fault intensities; all zero = clean run."""
+
+    straggler_frac: float = 0.0
+    straggler_delay_s: float = 2.0   # mean of the exponential extra delay
+    dropout_frac: float = 0.0
+    dropout_after_frac: float = 0.5  # crash time as fraction of horizon
+    duplicate_prob: float = 0.0      # per delivery
+    stale_resend_prob: float = 0.0   # per delivery: re-send previous update
+    byzantine_frac: float = 0.0
+    attack: str = "additive"
+    attack_kwargs: Tuple[Tuple[str, float], ...] = ()
+    launch_fault_rate: float = 0.0   # per launch attempt
+
+    def __post_init__(self):
+        for name in ("straggler_frac", "dropout_frac", "dropout_after_frac",
+                     "duplicate_prob", "stale_resend_prob", "byzantine_frac",
+                     "launch_fault_rate"):
+            v = getattr(self, name)
+            if not 0.0 <= v <= 1.0:
+                raise ValueError(f"{name} must be in [0, 1], got {v}")
+        if self.straggler_delay_s < 0:
+            raise ValueError("straggler_delay_s must be >= 0")
+        if self.byzantine_frac > 0 and self.attack not in PER_AGENT_ATTACKS:
+            raise ValueError(
+                f"attack {self.attack!r} is not applicable per-agent "
+                f"(collusion attacks need the benign cohort); "
+                f"known: {PER_AGENT_ATTACKS}")
+
+    def fault_modes(self) -> Tuple[str, ...]:
+        """Names of the fault modes this config actually injects."""
+        modes = []
+        if self.straggler_frac > 0:
+            modes.append("straggler")
+        if self.dropout_frac > 0:
+            modes.append("dropout")
+        if self.duplicate_prob > 0:
+            modes.append("duplicate")
+        if self.stale_resend_prob > 0:
+            modes.append("stale")
+        if self.byzantine_frac > 0:
+            modes.append("byzantine")
+        if self.launch_fault_rate > 0:
+            modes.append("launch_fault")
+        return tuple(modes)
+
+    def attack_fn(self):
+        if self.byzantine_frac <= 0:
+            return None
+        return _attacks.get_attack(self.attack, **dict(self.attack_kwargs))
+
+
+@dataclasses.dataclass(frozen=True)
+class AgentRoles:
+    """Deterministic role assignment for one replay (tuples of ids)."""
+
+    byzantine: Tuple[int, ...] = ()
+    stragglers: Tuple[int, ...] = ()
+    dropouts: Tuple[int, ...] = ()
+
+
+def assign_roles(config: ChaosConfig, num_agents: int,
+                 rng: np.random.Generator) -> AgentRoles:
+    """Sample the affected agent sets.  Roles are drawn independently
+    (an agent can be both byzantine and a straggler -- real fleets do
+    not partition their failure modes either)."""
+
+    def pick(frac: float) -> Tuple[int, ...]:
+        n = int(round(frac * num_agents))
+        if n == 0:
+            return ()
+        return tuple(sorted(rng.choice(num_agents, size=n, replace=False)
+                            .tolist()))
+
+    return AgentRoles(byzantine=pick(config.byzantine_frac),
+                      stragglers=pick(config.straggler_frac),
+                      dropouts=pick(config.dropout_frac))
+
+
+def make_launch_fault_hook(config: ChaosConfig, seed: int = 0
+                           ) -> Optional[Callable]:
+    """A ``fault_hook`` for ``AggregationService``: raises
+    ``FaultInjected`` with probability ``launch_fault_rate`` per launch
+    attempt, from its own seeded stream (independent of the service's
+    backoff jitter)."""
+    if config.launch_fault_rate <= 0:
+        return None
+    rng = np.random.default_rng(seed)
+
+    def hook():
+        if rng.random() < config.launch_fault_rate:
+            raise FaultInjected(
+                f"injected launch fault (rate={config.launch_fault_rate})")
+
+    return hook
+
+
+CHAOS_PROFILES = {
+    "clean": ChaosConfig(),
+    "stragglers": ChaosConfig(straggler_frac=0.3, straggler_delay_s=2.0),
+    "mixed": ChaosConfig(
+        straggler_frac=0.25, straggler_delay_s=2.0,
+        dropout_frac=0.15, dropout_after_frac=0.5,
+        duplicate_prob=0.1, stale_resend_prob=0.1,
+        byzantine_frac=0.3, attack="additive",
+        launch_fault_rate=0.1),
+}

@@ -1,0 +1,278 @@
+"""Replay a federated ScenarioSpec's client traffic through the
+streaming service under chaos.
+
+The scenario runner (``repro.scenarios``) answers "does the estimator
+hold up over T synchronous rounds"; this module answers the serving
+question: does the *service* -- buffering, staleness weighting,
+deadlines, retries, degradation -- hold up when the same client
+population talks to it over an unreliable transport?  The spec is the
+single source of truth for the problem (dimension, data heterogeneity,
+local-SGD recipe), so a served run is directly comparable to the
+runner's band for the same spec: ``metrics.breakdown_threshold(spec)``.
+
+The replay is a discrete-event simulation on ``SimClock`` -- a heap of
+(send | deliver | tick) events, every random draw from one seeded
+generator, so a chaos run is deterministic given (spec, chaos, serve,
+seed).  Agents send their locally-trained model (the real
+``federated.local_update``, jit-compiled once) tagged with the server
+round it was computed from; the transport delays, duplicates, replays
+and corrupts deliveries per ``ChaosConfig``; the service does the rest.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import time
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import federated
+from repro.data import synthetic
+from repro.scenarios import metrics
+from repro.scenarios.spec import ScenarioSpec
+from repro.serve.buffer import AgentUpdate
+from repro.serve.chaos import ChaosConfig, assign_roles, make_launch_fault_hook
+from repro.serve.clock import SimClock
+from repro.serve.service import AggregationService, CommitResult, ServeConfig
+
+_MODEL_COMMITS = ("aggregated", "degraded_partial")
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class ServeResult:
+    """One replay outcome (see ``replay``)."""
+
+    spec: ScenarioSpec
+    chaos: ChaosConfig
+    serve: ServeConfig
+    msd: np.ndarray               # per model-updating commit
+    summary: dict                 # metrics.attack_summary vs. the spec band
+    telemetry: dict               # ServeTelemetry.snapshot
+    recoveries: dict              # fault mode -> recovery event count
+    commits: List[CommitResult]
+    rounds_completed: int
+    sim_elapsed_s: float
+    wall_s: float
+    launch_audit: Optional[dict]
+    model: np.ndarray
+
+    def to_row(self) -> dict:
+        row = {
+            "scenario": self.spec.name or "<unnamed>",
+            "backend": self.serve.backend,
+            "k_min": self.serve.k_min,
+            "num_agents": self.spec.num_agents,
+            "dim": self.spec.dim,
+            "fault_modes": list(self.chaos.fault_modes()),
+            "recoveries": {k: int(v) for k, v in self.recoveries.items()},
+            "rounds_completed": int(self.rounds_completed),
+            "sim_elapsed_s": round(float(self.sim_elapsed_s), 3),
+            "wall_s": round(float(self.wall_s), 3),
+        }
+        row.update(self.summary)
+        row.update(self.telemetry)
+        if self.launch_audit is not None:
+            row["launch_audit"] = self.launch_audit
+        return row
+
+
+def _make_update_fn(grad_fn, steps: int, mu: float):
+    """The agents' local-training program, jit-compiled once for the
+    whole replay (steps/mu are Python closures, never traced args)."""
+
+    def f(w, client_idx, key):
+        return federated.local_update(w, client_idx, key,
+                                      grad_fn=grad_fn, steps=steps, mu=mu)
+
+    return jax.jit(f)
+
+
+def replay(spec: ScenarioSpec, *,
+           chaos: ChaosConfig = ChaosConfig(),
+           serve: ServeConfig = ServeConfig(),
+           rounds: Optional[int] = None,
+           seed: int = 0,
+           send_period_s: float = 1.0,
+           base_delay_s: float = 0.05,
+           max_events: int = 200_000) -> ServeResult:
+    """Run ``spec``'s client population against a fresh service until
+    ``rounds`` model-updating commits (default ``spec.num_steps``) land.
+
+    Only federated specs replay (the service is the fusion center);
+    ``spec.participation`` is the per-period send probability.  The
+    returned ``summary`` holds ``metrics.attack_summary`` of the served
+    MSD history against ``metrics.breakdown_threshold(spec)`` -- the
+    same acceptance band the scenario runner uses for this spec, so
+    "the service under chaos tracks the synchronous run" is one boolean
+    (``not summary["broke_down"]``).
+    """
+    if spec.paradigm != "federated":
+        raise ValueError(
+            f"serve replay needs a federated spec (the service is the "
+            f"fusion center), got paradigm {spec.paradigm!r}")
+    target_rounds = int(rounds if rounds is not None else spec.num_steps)
+    if target_rounds < 1:
+        raise ValueError(f"rounds must be >= 1, got {target_rounds}")
+
+    problem = synthetic.LinearModelProblem(
+        dim=spec.dim, noise_var=spec.noise_var, seed=spec.data_seed)
+    grad_fn = synthetic.make_client_grad_fn(
+        problem, spec.num_agents, data=spec.data,
+        alpha=spec.dirichlet_alpha, seed=spec.data_seed)
+    update_fn = _make_update_fn(grad_fn, spec.local_steps, spec.step_size)
+    w_star = np.asarray(problem.w_star, dtype=np.float32)
+
+    rng = np.random.default_rng(seed)
+    roles = assign_roles(chaos, spec.num_agents, rng)
+    attack_fn = chaos.attack_fn()
+    master_key = jax.random.key(spec.seed)
+
+    clock = SimClock()
+    service = AggregationService(
+        np.zeros_like(w_star), config=serve, clock=clock, seed=seed,
+        fault_hook=make_launch_fault_hook(chaos, seed=seed + 1))
+
+    # -- the event heap ----------------------------------------------------
+    events: list = []
+    eseq = 0
+
+    def push(t: float, kind: str, payload=None):
+        nonlocal eseq
+        heapq.heappush(events, (t, eseq, kind, payload))
+        eseq += 1
+
+    send_counter = {i: 0 for i in range(spec.num_agents)}
+    delivery_seq = {i: 0 for i in range(spec.num_agents)}
+    prev_update = {}              # agent -> last (round, payload np) sent
+    crash_round = max(int(chaos.dropout_after_frac * target_rounds), 1)
+    tick_dt = serve.deadline_s / 4.0
+
+    for i in range(spec.num_agents):
+        push(float(rng.uniform(0, send_period_s)), "send", i)
+    push(tick_dt, "tick")
+
+    def compute_payload(agent: int, server_round: int) -> np.ndarray:
+        k = jax.random.fold_in(
+            jax.random.fold_in(master_key, agent), send_counter[agent])
+        phi = update_fn(jnp.asarray(service.model),
+                        jnp.asarray(agent, dtype=jnp.int32), k)
+        if agent in roles.byzantine and attack_fn is not None:
+            phi = attack_fn(phi[None], jnp.ones((1,), bool),
+                            jax.random.fold_in(k, 1), server_round)[0]
+        return np.asarray(phi, dtype=np.float32)
+
+    def next_seq(agent: int) -> int:
+        delivery_seq[agent] += 1
+        return delivery_seq[agent]
+
+    def schedule_delivery(agent: int, upd: AgentUpdate, now: float):
+        delay = base_delay_s * (0.5 + float(rng.random()))
+        if agent in roles.stragglers:
+            delay += float(rng.exponential(chaos.straggler_delay_s))
+        push(now + delay, "deliver", upd)
+        if float(rng.random()) < chaos.duplicate_prob:
+            # transport replay: same sequence number, later arrival
+            push(now + delay * (1.5 + float(rng.random())), "deliver", upd)
+
+    # -- the loop ----------------------------------------------------------
+    msd: List[float] = []
+    commits: List[CommitResult] = []
+    commits_after_crash = 0
+    byz_cohort_commits = 0
+    wall_t0 = time.perf_counter()
+    n_events = 0
+
+    def absorb(new_commits: List[CommitResult]):
+        nonlocal commits_after_crash, byz_cohort_commits
+        for c in new_commits:
+            commits.append(c)
+            if c.kind not in _MODEL_COMMITS:
+                continue
+            msd.append(float(np.sum((service.model - w_star) ** 2)))
+            if c.round > crash_round:
+                commits_after_crash += 1
+            if any(a in roles.byzantine for a in c.agent_ids):
+                byz_cohort_commits += 1
+
+    while events and len(msd) < target_rounds and n_events < max_events:
+        t, _, kind, payload = heapq.heappop(events)
+        if t > clock.now():
+            # the clock can already be past t: retry backoff *sleeps*
+            # on the sim clock, so an event scheduled before the sleep
+            # may come due "in the past" -- it runs now, late, exactly
+            # like a blocked real service draining its queue
+            clock.advance_to(t)
+        n_events += 1
+        if kind == "tick":
+            absorb(service.tick())
+            push(t + tick_dt, "tick")
+        elif kind == "send":
+            agent = payload
+            crashed = (agent in roles.dropouts
+                       and service.round >= crash_round)
+            if not crashed:
+                if float(rng.random()) < spec.participation:
+                    send_counter[agent] += 1
+                    r = service.round
+                    phi = compute_payload(agent, r)
+                    upd = AgentUpdate(agent_id=agent, round=r, payload=phi,
+                                      seq=next_seq(agent), sent_at=t)
+                    schedule_delivery(agent, upd, t)
+                    if (prev_update.get(agent) is not None
+                            and float(rng.random()) < chaos.stale_resend_prob):
+                        # re-send the previous (older-round) update with
+                        # a fresh sequence number
+                        pr, pp = prev_update[agent]
+                        schedule_delivery(agent, AgentUpdate(
+                            agent_id=agent, round=pr, payload=pp,
+                            seq=next_seq(agent), sent_at=t), t)
+                    prev_update[agent] = (r, phi)
+                push(t + send_period_s * (0.5 + float(rng.random())),
+                     "send", agent)
+            # crashed agents schedule nothing: they are gone for good
+        elif kind == "deliver":
+            service.submit(payload)
+            absorb(service.drain_commits())
+
+    absorb(service.drain_commits())
+    wall_s = time.perf_counter() - wall_t0
+    msd_arr = np.asarray(msd, dtype=np.float64)
+    level = metrics.breakdown_threshold(spec)
+    summary = (metrics.attack_summary(msd_arr, breakdown_level=level)
+               if msd_arr.size else
+               {"steady_msd": float("inf"), "peak_msd": float("inf"),
+                "breakdown_level": float(level), "broke_down": True})
+
+    tel = service.telemetry
+    counters = tel.counters
+    recoveries = {}
+    for mode in chaos.fault_modes():
+        if mode == "straggler":
+            recoveries[mode] = (counters["stale_downweighted"]
+                                + counters["deadline_fired"])
+        elif mode == "dropout":
+            recoveries[mode] = commits_after_crash
+        elif mode == "duplicate":
+            recoveries[mode] = counters["submit_duplicate"]
+        elif mode == "stale":
+            recoveries[mode] = (counters["submit_rejected_stale"]
+                                + counters["stale_downweighted"])
+        elif mode == "byzantine":
+            recoveries[mode] = byz_cohort_commits
+        elif mode == "launch_fault":
+            recoveries[mode] = (counters["launch_recovered"]
+                                + counters["launch_failed"])
+
+    return ServeResult(
+        spec=spec, chaos=chaos, serve=serve,
+        msd=msd_arr, summary=summary,
+        telemetry=tel.snapshot(elapsed_s=wall_s),
+        recoveries=recoveries, commits=commits,
+        rounds_completed=len(msd),
+        sim_elapsed_s=clock.now(), wall_s=wall_s,
+        launch_audit=service.launch_audit(),
+        model=service.model)

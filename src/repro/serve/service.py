@@ -1,0 +1,416 @@
+"""The long-lived streaming aggregation service.
+
+``AggregationService`` accepts per-agent update streams (``submit``),
+buffers them FedBuff-style (admit a cohort when ``buffer >= k_min`` OR
+the admission deadline fires, whichever first), and launches the
+existing ``AggregationEngine`` kernel path -- one AOT-compiled launch
+program per cohort *geometry*, cached, with the cohort buffer donated
+to the launch.  Steady traffic therefore runs a single compiled
+executable forever: the only sanctioned compiles are the first sight of
+each geometry (warmup), and ``telemetry.post_warmup_misses`` counts any
+violation.
+
+Fault tolerance by construction:
+
+  * duplicate / replayed deliveries and non-finite payloads never reach
+    the estimator (``CohortBuffer`` admission verdicts);
+  * staleness-weighted admission: an update of round age ``s`` gets
+    weight ``w * (1+s)**-staleness_alpha`` (rejected beyond
+    ``max_staleness``); the weights ride into the engine, which
+    normalizes them through ``location.normalize_weights`` -- an
+    all-invalid column can therefore never divide by zero, and the
+    service additionally refuses to launch a cohort whose total weight
+    is numerically zero (carry-forward instead of averaging garbage);
+  * engine-launch failures are retried under
+    ``retry.RetryPolicy`` (jittered exponential backoff, deadline
+    budget); exhaustion degrades to carry-forward -- the loop never
+    raises;
+  * graceful degradation below ``k_min`` (the ladder, see
+    docs/serving.md): a deadline cohort with ``quorum <= k < k_min``
+    is aggregated with a *widened robustness margin* -- padded to the
+    ``k_min`` geometry with anchor rows holding the previous model at
+    half the total mass, run through a Tukey engine with
+    ``c * degraded_c_scale`` (harsher outlier rejection), and the model
+    step clipped to a trust region derived from recent full-cohort
+    steps; below ``quorum`` (or with no step history yet, or with
+    ``degradation="carry"``) the previous model is carried forward.
+    A non-finite aggregate is always discarded (carry-forward), so the
+    served model is finite at every round by construction.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import mm_aggregate, ops, tuning
+from repro.serve import retry as _retry
+from repro.serve.buffer import AgentUpdate, CohortBuffer, Pending
+from repro.serve.clock import WallClock
+from repro.serve.telemetry import ServeTelemetry
+
+DEGRADATIONS = ("partial", "carry")
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    """Admission + degradation policy of one service instance."""
+
+    k_min: int = 8                    # cohort admission threshold
+    deadline_s: float = 1.0           # admit-by deadline per cohort
+    max_staleness: int = 4            # rounds; older updates rejected
+    staleness_alpha: float = 0.5      # weight = (1+staleness)**-alpha
+    quorum: int = 2                   # below this, never aggregate
+    degradation: str = "partial"      # partial | carry (sub-k_min ladder)
+    degraded_c_scale: float = 0.5     # widened margin: Tukey c scale
+    trust_factor: float = 2.0         # partial step clip vs. EMA step norm
+    max_buffer: int = 4096            # backpressure cap
+    donate: bool = True               # donate the cohort buffer to launch
+    num_iters: int = 10               # IRLS depth
+    backend: str = "pallas"           # engine backend (pallas | jnp)
+    interpret: Optional[bool] = None  # pallas interpret override
+    retry: _retry.RetryPolicy = _retry.RetryPolicy()
+
+    def __post_init__(self):
+        if self.k_min < 1:
+            raise ValueError(f"k_min must be >= 1, got {self.k_min}")
+        if not 1 <= self.quorum <= self.k_min:
+            raise ValueError(
+                f"quorum must be in [1, k_min={self.k_min}], "
+                f"got {self.quorum}")
+        if self.degradation not in DEGRADATIONS:
+            raise ValueError(
+                f"unknown degradation {self.degradation!r}; "
+                f"known: {DEGRADATIONS}")
+        if not 0.0 < self.degraded_c_scale <= 1.0:
+            raise ValueError(
+                "degraded_c_scale widens the robustness margin and must "
+                f"be in (0, 1], got {self.degraded_c_scale}")
+        if self.max_staleness < 0 or self.deadline_s <= 0:
+            raise ValueError("max_staleness >= 0 and deadline_s > 0 required")
+
+    def staleness_weight(self, staleness: int) -> float:
+        return float((1.0 + max(staleness, 0)) ** -self.staleness_alpha)
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class CommitResult:
+    """One admission outcome (committed model round or degradation)."""
+
+    kind: str                 # aggregated | degraded_partial | carried_forward
+    round: int                # server round AFTER this commit
+    cohort_size: int          # real (non-anchor) members launched
+    agent_ids: tuple = ()
+    stalenesses: tuple = ()
+    cache_hit: bool = False
+    compile_s: float = 0.0
+    launch_wall_s: float = 0.0
+    attempts: int = 0
+    clipped: bool = False     # trust-region clip engaged (partial path)
+
+
+class _WeightFloor:
+    # numerically-zero total cohort mass; matches location._SCALE_FLOOR
+    VALUE = 1e-12
+
+
+def assemble_cohort(entries: List[Pending], config: ServeConfig
+                    ) -> Tuple[np.ndarray, np.ndarray]:
+    """Stage pending entries into the (k, M) cohort + (k,) weight
+    column.  Raises on duplicate agent ids: the buffer's one-slot-per-
+    agent invariant makes this unreachable from the service loop, but
+    direct callers get a clear error instead of a silently double-
+    counted agent."""
+    ids = [p.update.agent_id for p in entries]
+    if len(set(ids)) != len(ids):
+        dup = sorted({i for i in ids if ids.count(i) > 1})
+        raise ValueError(
+            f"duplicate agent id(s) {dup} in one cohort: each agent "
+            "contributes at most one update per cohort (the admission "
+            "buffer supersedes, never duplicates)")
+    x = np.stack([np.asarray(p.update.payload, dtype=np.float32).ravel()
+                  for p in entries])
+    a = np.asarray([p.update.weight * config.staleness_weight(p.staleness)
+                    for p in entries], dtype=np.float32)
+    return x, a
+
+
+class AggregationService:
+    """See module docstring.  ``fault_hook`` (chaos injection) is called
+    once per launch *attempt* and may raise to simulate an engine
+    failure; it must never be used to mutate service state."""
+
+    def __init__(self, model0, *, config: ServeConfig = ServeConfig(),
+                 clock=None, seed: int = 0,
+                 fault_hook: Optional[Callable] = None):
+        self.config = config
+        self.clock = clock if clock is not None else WallClock()
+        self._w = np.asarray(model0, dtype=np.float32).ravel().copy()
+        if not np.isfinite(self._w).all():
+            raise ValueError("initial model must be finite")
+        self.round = 0
+        self.dim = self._w.shape[0]
+        self.telemetry = ServeTelemetry()
+        self.buffer = CohortBuffer(max_staleness=config.max_staleness,
+                                   max_buffer=config.max_buffer)
+        self._rng = np.random.default_rng(seed)
+        self._fault_hook = fault_hook
+        self._execs: dict = {}
+        self._records: list = []
+        self._commit_log: List[CommitResult] = []
+        self._deadline_t: Optional[float] = None
+        self._step_norm_ema: Optional[float] = None
+        c95 = ops.mestimators.TUKEY_C95
+        self._engines = {
+            False: ops.get_engine(
+                num_iters=config.num_iters, backend=config.backend,
+                interpret=config.interpret),
+            True: ops.get_engine(
+                num_iters=config.num_iters, backend=config.backend,
+                interpret=config.interpret,
+                c=c95 * config.degraded_c_scale),
+        }
+
+    # -- public surface ----------------------------------------------------
+
+    @property
+    def model(self) -> np.ndarray:
+        return self._w.copy()
+
+    def submit(self, update: AgentUpdate) -> str:
+        """Deliver one update; returns the admission verdict and pumps
+        full-cohort admissions."""
+        was_empty = len(self.buffer) == 0
+        verdict = self.buffer.add(update, now=self.clock.now(),
+                                  current_round=self.round)
+        self.telemetry.count(f"submit_{verdict}")
+        if verdict in ("buffered", "superseded"):
+            if was_empty and len(self.buffer) > 0:
+                self._deadline_t = self.clock.now() + self.config.deadline_s
+            self._pump()
+        return verdict
+
+    def tick(self) -> List[CommitResult]:
+        """Advance time-driven state: fire the admission deadline if it
+        expired.  Call this from the transport loop; under a simulated
+        clock the chaos driver calls it at a fixed cadence."""
+        before = len(self._commit_log)
+        self._pump()
+        if (self._deadline_t is not None
+                and self.clock.now() >= self._deadline_t):
+            self.telemetry.count("deadline_fired")
+            self._admit(deadline=True)
+        return self._commit_log[before:]
+
+    def admit_now(self) -> CommitResult:
+        """Force an admission decision immediately (manual flush /
+        drain): same ladder as a fired deadline."""
+        return self._admit(deadline=True)
+
+    def drain_commits(self) -> List[CommitResult]:
+        out, self._commit_log = self._commit_log, []
+        return out
+
+    def launch_audit(self) -> Optional[dict]:
+        """``mm_aggregate.launch_plan`` dicts for every pallas workload
+        the service's compiles resolved (ground truth, recorded at
+        lower time)."""
+        pallas = [r for r in self._records if r["backend"] == "pallas"]
+        if not pallas:
+            return None
+        plans = []
+        for r in pallas:
+            plan = mm_aggregate.launch_plan(
+                r["k"], r["m"], r["n"], dtype=r["dtype"],
+                block_m=r["block_m"], block_k=r["block_k"],
+                path=r.get("path"))
+            d = plan._asdict()
+            d["grid"] = list(d["grid"])
+            plans.append(d)
+        if len(plans) == 1:
+            return plans[0]
+        return {"layouts": plans, "n_layouts": len(plans)}
+
+    # -- admission ---------------------------------------------------------
+
+    def _pump(self) -> None:
+        while len(self.buffer) >= self.config.k_min:
+            self._admit(deadline=False)
+
+    def _admit(self, *, deadline: bool) -> CommitResult:
+        cfg = self.config
+        k = min(len(self.buffer), cfg.k_min)
+        if deadline and k < cfg.k_min:
+            result = self._admit_partial(k)
+        else:
+            entries = self.buffer.take(cfg.k_min)
+            result = self._launch_commit(entries, degraded=False)
+        # re-arm / clear the deadline for whatever is still pending
+        if len(self.buffer) > 0:
+            self._deadline_t = self.clock.now() + cfg.deadline_s
+        else:
+            self._deadline_t = None
+        self._commit_log.append(result)
+        return result
+
+    def _admit_partial(self, k: int) -> CommitResult:
+        """The sub-``k_min`` degradation ladder (deadline fired)."""
+        cfg = self.config
+        if k == 0:
+            self.telemetry.count("zero_participant_rounds")
+            return self._carry(0, ())
+        if k < cfg.quorum or cfg.degradation == "carry" \
+                or self._step_norm_ema is None:
+            # below quorum, explicitly configured, or no trust-region
+            # history yet: never aggregate -- carry the model forward
+            # (the entries stay buffered for the next cohort)
+            self.telemetry.count("partial_carried")
+            return self._carry(k, ())
+        entries = self.buffer.take(k)
+        return self._launch_commit(entries, degraded=True)
+
+    def _carry(self, k: int, agent_ids: tuple) -> CommitResult:
+        self.telemetry.count("carried_forward")
+        res = CommitResult(kind="carried_forward", round=self.round,
+                           cohort_size=k, agent_ids=agent_ids)
+        self.telemetry.record_commit(cohort_size=k, latencies_s=[],
+                                     launch_wall_s=None, kind=res.kind)
+        return res
+
+    # -- launch ------------------------------------------------------------
+
+    def _launch_commit(self, entries: List[Pending],
+                       *, degraded: bool) -> CommitResult:
+        cfg = self.config
+        x, a = assemble_cohort(entries, cfg)
+        if float(a.sum()) <= _WeightFloor.VALUE:
+            # total mass numerically zero: normalize_weights would fall
+            # back to uniform -- that is "silently averaging garbage",
+            # so refuse and carry forward instead
+            self.telemetry.count("zero_weight_rejected")
+            return self._carry(len(entries),
+                               tuple(p.update.agent_id for p in entries))
+        if degraded:
+            # pad to the k_min geometry with anchor rows holding the
+            # previous model at half the total mass: the widened-margin
+            # estimator can reject the entire partial cohort and still
+            # land on the previous model
+            n_anchor = cfg.k_min - x.shape[0]
+            if n_anchor > 0:
+                anchors = np.broadcast_to(self._w, (n_anchor, self.dim))
+                x = np.concatenate([x, anchors], axis=0)
+                a = np.concatenate(
+                    [a, np.full((n_anchor,), a.sum() / n_anchor,
+                                dtype=np.float32)])
+        try:
+            result, wall, attempts, cache_hit, compile_s = \
+                self._launch(x, a, degraded)
+        except _retry.RetryError as err:
+            self.telemetry.count("launch_failed")
+            self.telemetry.count("updates_lost", len(entries))
+            self.telemetry.count(
+                "launch_attempts_exhausted", err.attempts)
+            return self._carry(len(entries),
+                               tuple(p.update.agent_id for p in entries))
+        if not np.isfinite(result).all():
+            self.telemetry.count("nonfinite_rejected")
+            return self._carry(len(entries),
+                               tuple(p.update.agent_id for p in entries))
+
+        # trust-region step clip, on EVERY commit: a cohort that goes
+        # byzantine-majority (the estimator's 50% breakdown point) can
+        # move the model by at most trust_factor x the EMA of recent
+        # step norms instead of halfway to the attack point -- and
+        # because the model then stays near the honest cluster, honest
+        # updates stay tightly grouped, the MAD scale stays narrow, and
+        # sub-majority outliers keep getting fully rejected.  The EMA
+        # feeds on *clipped* norms (full cohorts only), so an attacker
+        # cannot inflate the trust region by occasionally succeeding;
+        # it grows at most geometrically (x1.1/round) when the model
+        # legitimately needs sustained large steps.
+        clipped = False
+        delta = result - self._w
+        norm = float(np.linalg.norm(delta))
+        if self._step_norm_ema is not None:
+            clip = cfg.trust_factor * float(self._step_norm_ema)
+            if norm > clip > 0.0:
+                result = self._w + delta * (clip / norm)
+                norm = clip
+                clipped = True
+                self.telemetry.count("step_clipped")
+        if not degraded:
+            self._step_norm_ema = norm if self._step_norm_ema is None \
+                else 0.9 * self._step_norm_ema + 0.1 * norm
+
+        self._w = result
+        self.round += 1
+        evicted = self.buffer.refresh_staleness(self.round)
+        if evicted:
+            self.telemetry.count("submit_rejected_stale", len(evicted))
+        now = self.clock.now()
+        for p in entries:
+            self.telemetry.record_admission(p.staleness)
+        if attempts > 1:
+            self.telemetry.count("launch_recovered")
+            self.telemetry.count("launch_retries", attempts - 1)
+        kind = "degraded_partial" if degraded else "aggregated"
+        self.telemetry.record_commit(
+            cohort_size=len(entries),
+            latencies_s=[now - p.arrival_t for p in entries],
+            launch_wall_s=wall, kind=kind)
+        return CommitResult(
+            kind=kind, round=self.round, cohort_size=len(entries),
+            agent_ids=tuple(p.update.agent_id for p in entries),
+            stalenesses=tuple(p.staleness for p in entries),
+            cache_hit=cache_hit, compile_s=compile_s,
+            launch_wall_s=wall, attempts=attempts, clipped=clipped)
+
+    def _compiled(self, k_geom: int, degraded: bool):
+        """The compiled launch executable for one cohort geometry --
+        compiled exactly once per (geometry, engine, tuning state)."""
+        key = (k_geom, self.dim, "float32", bool(degraded),
+               tuning.cache_state())
+        cached = self._execs.get(key)
+        if cached is not None:
+            self.telemetry.record_cache(key, hit=True)
+            return cached, True, 0.0
+        t0 = time.perf_counter()
+        with ops.record_workloads() as records:
+            lowered = self._engines[bool(degraded)].lower_launch(
+                k_geom, self.dim, jnp.float32, weighted=True,
+                donate=self.config.donate)
+            compiled = lowered.compile()
+        compile_s = time.perf_counter() - t0
+        for r in records:
+            if r not in self._records:
+                self._records.append(r)
+        self._execs[key] = compiled
+        self.telemetry.record_cache(key, hit=False, compile_s=compile_s)
+        return compiled, False, compile_s
+
+    def _launch(self, x: np.ndarray, a: np.ndarray, degraded: bool):
+        compiled, cache_hit, compile_s = self._compiled(x.shape[0], degraded)
+
+        def attempt():
+            if self._fault_hook is not None:
+                self._fault_hook()
+            # re-staged per attempt: the device cohort buffer is donated
+            # to the launch, so it must never be re-used after a failure
+            xd = jnp.asarray(x)
+            ad = jnp.asarray(a, dtype=jnp.float32)
+            t0 = time.perf_counter()
+            out = jax.block_until_ready(compiled(xd, ad))
+            return np.asarray(out), time.perf_counter() - t0
+
+        def on_retry(attempt_i, exc, delay):
+            self.telemetry.count("launch_backoffs")
+
+        (result, wall), attempts = _retry.call(
+            attempt, policy=self.config.retry, clock=self.clock,
+            rng=self._rng, on_retry=on_retry)
+        return result, wall, attempts, cache_hit, compile_s

@@ -1,0 +1,104 @@
+"""Service telemetry: latency percentiles, throughput, histograms,
+recovery counters, executable-cache statistics.
+
+Two latency series are kept deliberately separate and labeled as such:
+
+  request latency   clock-based (simulated seconds under ``SimClock``):
+                    update arrival in the buffer -> the commit that
+                    included it.  This is the per-request number the
+                    bench reports as p50/p95/p99.
+  launch wall       real seconds around the compiled engine launch
+                    (always wall time, even under a simulated clock).
+
+``snapshot`` renders everything as a strict-JSON-able dict for
+BENCH_serve.json (non-finite values become ``None``).
+"""
+
+from __future__ import annotations
+
+import collections
+from typing import Dict, List, Optional
+
+import numpy as np
+
+PERCENTILES = (50, 95, 99)
+
+
+def _pcts(values: List[float], prefix: str) -> Dict[str, Optional[float]]:
+    out: Dict[str, Optional[float]] = {}
+    arr = np.asarray(values, dtype=np.float64)
+    for p in PERCENTILES:
+        if arr.size == 0:
+            out[f"{prefix}_p{p}"] = None
+        else:
+            v = float(np.percentile(arr, p))
+            out[f"{prefix}_p{p}"] = v if np.isfinite(v) else None
+    return out
+
+
+class ServeTelemetry:
+    """Mutable per-service counters; see module docstring."""
+
+    def __init__(self):
+        self.request_latency_s: List[float] = []
+        self.launch_wall_s: List[float] = []
+        self.cohort_sizes = collections.Counter()     # real members/commit
+        self.staleness = collections.Counter()        # per admitted update
+        self.counters = collections.Counter()
+        # executable-cache bookkeeping: first sight of a geometry is the
+        # sanctioned warmup compile; any later miss is a retrace bug
+        self._geometries_seen = set()
+        self.post_warmup_misses = 0
+        self.compile_s_total = 0.0
+
+    # -- admission / commit events -----------------------------------------
+
+    def count(self, name: str, n: int = 1) -> None:
+        self.counters[name] += n
+
+    def record_admission(self, staleness: int) -> None:
+        self.staleness[int(staleness)] += 1
+        if staleness > 0:
+            self.counters["stale_downweighted"] += 1
+
+    def record_commit(self, *, cohort_size: int, latencies_s: List[float],
+                      launch_wall_s: Optional[float], kind: str) -> None:
+        self.counters["commits"] += 1
+        self.counters[f"commits_{kind}"] += 1
+        self.cohort_sizes[int(cohort_size)] += 1
+        self.counters["updates_applied"] += len(latencies_s)
+        self.request_latency_s.extend(float(v) for v in latencies_s)
+        if launch_wall_s is not None:
+            self.launch_wall_s.append(float(launch_wall_s))
+
+    def record_cache(self, key, *, hit: bool, compile_s: float = 0.0) -> None:
+        if hit:
+            self.counters["exec_cache_hits"] += 1
+            return
+        self.counters["exec_cache_misses"] += 1
+        self.compile_s_total += compile_s
+        if key in self._geometries_seen:
+            self.post_warmup_misses += 1
+        self._geometries_seen.add(key)
+
+    # -- rendering ---------------------------------------------------------
+
+    def snapshot(self, *, elapsed_s: Optional[float] = None) -> dict:
+        applied = int(self.counters["updates_applied"])
+        row = {
+            "counters": {k: int(v) for k, v in sorted(self.counters.items())},
+            "cohort_size_hist": {str(k): int(v) for k, v in
+                                 sorted(self.cohort_sizes.items())},
+            "staleness_hist": {str(k): int(v) for k, v in
+                               sorted(self.staleness.items())},
+            "compile_s_total": round(self.compile_s_total, 4),
+            "post_warmup_misses": int(self.post_warmup_misses),
+            "post_warmup_cache_hit": self.post_warmup_misses == 0,
+            "n_geometries": len(self._geometries_seen),
+        }
+        row.update(_pcts(self.request_latency_s, "latency"))
+        row.update(_pcts(self.launch_wall_s, "launch_wall"))
+        if elapsed_s is not None and elapsed_s > 0:
+            row["elapsed_s"] = round(float(elapsed_s), 6)
+            row["updates_per_sec"] = round(applied / float(elapsed_s), 3)
+        return row
