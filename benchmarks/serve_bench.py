@@ -10,9 +10,17 @@ Per profile row (``repro.serve.scenario.ServeResult.to_row``):
   * sustained throughput: ``updates_per_sec`` of applied updates over
     the real harness wall time;
   * cohort-size and staleness histograms;
-  * per-fault-mode recovery counts (the chaos acceptance surface);
+  * per-fault-mode recovery counts (the chaos acceptance surface),
+    including the network-level modes (partition / reorder / corrupt /
+    slow_loris) and journal crash recoveries;
+  * transport stats: bounded-channel queue-depth high-water mark vs.
+    the channel capacity, backpressure verdicts, tenants;
+  * ``duplicate_admissions``: (agent, seq) pairs admitted twice -- must
+    be 0 (the exactly-once-across-restart invariant);
   * ``post_warmup_cache_hit``: every post-warmup cohort ran the cached
-    executable -- the no-retrace contract of the serve loop;
+    executable -- the no-retrace contract of the serve loop (the
+    "mixed" row runs 2 concurrent tenants sharing one executable
+    cache, so its cache hits witness cross-tenant sharing);
   * the pallas launch audit (geometry the engine actually resolved).
 
 ``--json PATH`` writes BENCH_serve.json (audited by
@@ -33,37 +41,44 @@ from repro import compat
 from repro.scenarios.spec import ScenarioSpec
 from repro.serve import CHAOS_PROFILES, ServeConfig, replay
 
-DEFAULT_PROFILES = ("clean", "stragglers", "mixed")
+DEFAULT_PROFILES = ("clean", "stragglers", "network", "mixed")
 SMOKE_PROFILES = ("clean", "mixed")
+# the all-faults profile doubles as the multi-tenant row: two tenant
+# services behind one front, agents split between them
+PROFILE_TENANTS = {"mixed": 2}
 
 
 def run(profiles, *, rounds: int, backend: str, seed: int):
     rows = []
     for profile in profiles:
+        tenants = PROFILE_TENANTS.get(profile, 1)
         spec = ScenarioSpec(
             name=f"serve-{profile}", paradigm="federated",
-            num_agents=16, dim=8, num_steps=rounds,
+            num_agents=16 * tenants, dim=8, num_steps=rounds,
             step_size=0.05, local_steps=3)
         res = replay(spec, chaos=CHAOS_PROFILES[profile],
                      serve=ServeConfig(k_min=8, deadline_s=1.0,
                                        backend=backend),
-                     rounds=rounds, seed=seed)
+                     rounds=rounds, seed=seed, tenants=tenants)
         row = res.to_row()
         row["profile"] = profile
         rows.append(row)
         ok = (not row["broke_down"]
               and row["rounds_completed"] == rounds
+              and row["duplicate_admissions"] == 0
               and all(v > 0 for v in row["recoveries"].values()))
         print(f"{profile:12s} steady={row['steady_msd']:.5g} "
               f"band={row['breakdown_level']:.3g} "
               f"p50/p95/p99={row['latency_p50']:.3f}/"
               f"{row['latency_p95']:.3f}/{row['latency_p99']:.3f} "
               f"upd/s={row['updates_per_sec']:.1f} "
+              f"tenants={row['tenants']} qmax={row['queue_depth_max']} "
               f"cache_hit={row['post_warmup_cache_hit']} ok={ok}")
         if not ok:
             print(f"FAIL: profile {profile} row unacceptable: "
                   f"broke_down={row['broke_down']} "
                   f"rounds={row['rounds_completed']}/{rounds} "
+                  f"dup_admissions={row['duplicate_admissions']} "
                   f"recoveries={row['recoveries']}", file=sys.stderr)
             sys.exit(1)
     return rows

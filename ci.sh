@@ -51,8 +51,17 @@ python -m repro.analysis.bench_audit BENCH_large_cohort.json
 # launch audit); the sweep exits non-zero on non-finite loss.
 python examples/scenario_sweep.py --paradigm substrate --smoke
 # streaming-service smoke: a clean and a full-chaos replay through
-# repro.serve (pallas launch path, cached donated executables); the
-# audit fails on non-finite metrics, a broken-down profile, zero
-# fault-mode recoveries, or any post-warmup executable-cache miss.
+# the transport-fronted repro.serve (pallas launch path, cached donated
+# executables shared across 2 tenants on the mixed row); the audit
+# fails on non-finite metrics, a broken-down profile, zero fault-mode
+# recoveries (incl. partition/reorder/corrupt/crash), any post-warmup
+# executable-cache miss, unbounded queue depth, duplicate admissions,
+# or a missing crash-restart / multi-tenant row.
 python benchmarks/serve_bench.py --smoke --json BENCH_serve.json
 python -m repro.analysis.bench_audit BENCH_serve.json
+# crash-restart smoke: kill the service mid-stream, restore it from its
+# write-ahead journal, and assert no duplicate admission plus a final
+# model inside the scenario-runner MSD band (serve_agg exits non-zero
+# on any of: broke_down, duplicate admissions, missing crash recovery).
+python examples/serve_agg.py --profile stragglers --crash-at 0.5 \
+    --rounds 20 --backend pallas

@@ -1,15 +1,19 @@
 """Streaming aggregation service demo: replay a federated scenario's
-client traffic through ``repro.serve`` under a chaos profile and print
-what the service survived.
+client traffic through the transport-fronted ``repro.serve`` under a
+chaos profile and print what the service survived.
 
   PYTHONPATH=src python examples/serve_agg.py                 # clean
   PYTHONPATH=src python examples/serve_agg.py --profile mixed # full chaos
-  PYTHONPATH=src python examples/serve_agg.py --profile stragglers \
-      --rounds 50 --k-min 8 --backend pallas
+  PYTHONPATH=src python examples/serve_agg.py --profile network \
+      --tenants 2 --agents 32                       # two tenants, one cache
+  PYTHONPATH=src python examples/serve_agg.py --crash-at 0.5 \
+      --rounds 20                         # kill mid-run, restore from journal
 """
 
 import argparse
+import dataclasses
 import json
+import sys
 
 from repro.scenarios.spec import ScenarioSpec
 from repro.serve import CHAOS_PROFILES, ServeConfig, replay
@@ -25,6 +29,13 @@ def main():
     ap.add_argument("--k-min", type=int, default=8)
     ap.add_argument("--deadline-s", type=float, default=1.0)
     ap.add_argument("--backend", default="jnp", choices=("jnp", "pallas"))
+    ap.add_argument("--tenants", type=int, default=1,
+                    help="concurrent tenant services behind one front "
+                         "(agents split between them, executables shared)")
+    ap.add_argument("--crash-at", type=float, action="append", default=None,
+                    metavar="FRAC",
+                    help="kill the service at FRAC of the run and restore "
+                         "it from its journal (repeatable, in (0, 1))")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -33,16 +44,22 @@ def main():
         num_agents=args.agents, dim=args.dim, num_steps=args.rounds,
         step_size=0.05, local_steps=3)
     chaos = CHAOS_PROFILES[args.profile]
+    if args.crash_at:
+        chaos = dataclasses.replace(
+            chaos, crash_restart_frac=tuple(
+                sorted(set(chaos.crash_restart_frac)
+                       | set(args.crash_at))))
     serve = ServeConfig(k_min=args.k_min, deadline_s=args.deadline_s,
                         backend=args.backend)
 
     res = replay(spec, chaos=chaos, serve=serve, rounds=args.rounds,
-                 seed=args.seed)
+                 seed=args.seed, tenants=args.tenants)
     tel = res.telemetry
     print(f"profile={args.profile}  fault modes: "
           f"{', '.join(chaos.fault_modes()) or '(none)'}")
     print(f"rounds committed : {res.rounds_completed}/{args.rounds} "
-          f"(sim {res.sim_elapsed_s:.1f}s, wall {res.wall_s:.2f}s)")
+          f"(sim {res.sim_elapsed_s:.1f}s, wall {res.wall_s:.2f}s, "
+          f"{res.tenants} tenant(s))")
     print(f"steady MSD       : {res.summary['steady_msd']:.5g} "
           f"(band {res.summary['breakdown_level']:.3g}, "
           f"broke_down={res.summary['broke_down']})")
@@ -50,11 +67,32 @@ def main():
           f"{tel['latency_p95']:.3f} / {tel['latency_p99']:.3f} sim-s")
     print(f"throughput       : {tel['updates_per_sec']:.1f} updates/s "
           f"(post-warmup cache hit: {tel['post_warmup_cache_hit']})")
+    print(f"transport        : queue depth {res.transport['queue_depth_max']}"
+          f"/{res.transport['channel_capacity']} cap, "
+          f"{res.transport['backpressure_total']} backpressure verdict(s), "
+          f"{res.transport['exec_cache_compiles']} compile(s) for "
+          f"{res.transport['exec_cache_keys']} geometry key(s)")
+    if res.crash_restarts:
+        print(f"crash restarts   : {res.crash_restarts} journal "
+              f"restore(s), {res.duplicate_admissions} duplicate "
+              "admission(s) across restarts")
     if res.recoveries:
         print("recoveries       :",
               json.dumps(res.recoveries, sort_keys=True))
     print("counters         :",
           json.dumps(tel["counters"], sort_keys=True))
+
+    failures = []
+    if res.summary["broke_down"]:
+        failures.append("served model broke out of the scenario band")
+    if res.duplicate_admissions:
+        failures.append(f"{res.duplicate_admissions} duplicate admissions")
+    if (chaos.crash_restart_frac
+            and not res.recoveries.get("crash")):
+        failures.append("crash requested but no journal recovery ran")
+    if failures:
+        print("FAIL: " + "; ".join(failures), file=sys.stderr)
+        sys.exit(1)
 
 
 if __name__ == "__main__":

@@ -21,7 +21,12 @@ and evolve in one place; ``ci.sh`` shrinks to one
                       throughput, and ``post_warmup_cache_hit`` true
                       (the serve loop compiled only at warmup); every
                       injected fault mode must show a nonzero recovery
-                      count.
+                      count; queue depth must stay bounded by the
+                      transport channel capacity; the bench must
+                      include a crash-restart row with nonzero crash
+                      recoveries and zero duplicate admissions, and a
+                      multi-tenant (>= 2 tenants) row whose shared
+                      executable cache took post-warmup hits.
 
 The file kind is inferred from the filename (``--kind`` overrides).
 """
@@ -120,6 +125,38 @@ def audit_serve(bench: dict) -> List[str]:
                 errors.append(
                     f"{name}: injected fault mode {mode!r} shows no "
                     f"recovery events (recoveries={recov})")
+        if "queue_depth_max" not in r:
+            errors.append(f"{name}: missing transport queue-depth "
+                          "telemetry (queue_depth_max)")
+        else:
+            cap = r.get("channel_capacity")
+            if not isinstance(cap, int) or cap < 1:
+                errors.append(f"{name}: queue depth reported without a "
+                              f"channel capacity bound (got {cap!r})")
+            elif r["queue_depth_max"] > cap:
+                errors.append(
+                    f"{name}: unbounded queue depth: high-water "
+                    f"{r['queue_depth_max']} exceeds the channel "
+                    f"capacity {cap}")
+        if r.get("duplicate_admissions"):
+            errors.append(
+                f"{name}: {r['duplicate_admissions']} duplicate "
+                "admission(s): an (agent, seq) pair was admitted twice "
+                "(exactly-once across crash/restart is broken)")
+    crash_rows = [r for r in rows
+                  if "crash" in (r.get("fault_modes") or [])]
+    if not crash_rows:
+        errors.append("no crash-restart chaos row (zero crash "
+                      "recoveries across the bench)")
+    elif not any((r.get("recoveries") or {}).get("crash")
+                 for r in crash_rows):
+        errors.append("crash-restart row(s) present but zero crash "
+                      "recoveries: the journal restore path never ran")
+    if not any(int(r.get("tenants") or 1) >= 2
+               and r.get("post_warmup_cache_hit") for r in rows):
+        errors.append("no multi-tenant (>= 2 tenants) row with "
+                      "post-warmup executable-cache hits: cross-tenant "
+                      "executable sharing is unverified")
     return errors
 
 

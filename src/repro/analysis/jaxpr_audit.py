@@ -27,7 +27,10 @@ jaxprs (recursing through scan/pjit/cond/while sub-jaxprs) to assert:
 
   serve-retrace   a steady serve session (identical-geometry cohorts
                   through ``repro.serve``) compiles exactly once and
-                  hits the executable cache on every later cohort.
+                  hits the executable cache on every later cohort; and
+                  N tenants behind one transport front sharing an
+                  ``ExecutableCache`` compile exactly once per distinct
+                  geometry -- never once per tenant.
 
 All tracing is abstract (``jax.make_jaxpr`` / AOT ``.lower``); only the
 serve-retrace check runs a tiny interpreted session (the executable
@@ -321,7 +324,87 @@ def check_serve(session=None) -> List[Finding]:
     return out
 
 
+def _multitenant_front(tenants: int = 3):
+    """Three tenants of identical cohort geometry behind one transport
+    front, two cohorts each, on the interpreted pallas path."""
+    import numpy as np
+    from repro.serve.buffer import AgentUpdate
+    from repro.serve.clock import SimClock
+    from repro.serve.service import ServeConfig
+    from repro.serve.transport import TransportFront
+    front = TransportFront(clock=SimClock())
+    cfg = ServeConfig(k_min=4, deadline_s=1.0, backend="pallas",
+                      interpret=True)
+    for i in range(tenants):
+        front.add_tenant(f"t{i}", np.zeros(16, np.float32), config=cfg)
+    seq = 0
+    for _ in range(2):
+        for i in range(tenants):
+            for agent in range(4):
+                seq += 1
+                front.offer(f"t{i}", AgentUpdate(
+                    agent_id=agent, round=front.tenant(f"t{i}").round,
+                    payload=np.full(16, 0.1, np.float32), seq=seq))
+            front.pump()
+    return front
+
+
+def check_serve_multitenant(front=None) -> List[Finding]:
+    """The multi-tenant no-retrace contract: N tenant sessions sharing
+    one executable cache compile exactly once per distinct cohort
+    geometry, never once per tenant.  Cache keys are value tuples, so
+    summing the per-key compile counters across every cache object the
+    tenants actually hold exposes the classic regression -- each tenant
+    quietly owning its own cache still compiles each *key* N times
+    (``front`` overrides the default session; the mutation tests inject
+    broken ones)."""
+    out: List[Finding] = []
+    f = _multitenant_front() if front is None else front
+    services = list(f.tenants.values())
+    n_tenants = len(services)
+
+    caches = {id(svc.exec_cache): svc.exec_cache for svc in services}
+    compiles = collections.Counter()
+    hits = 0
+    for cache in caches.values():
+        compiles.update(cache.compiles)
+        hits += cache.hits
+    n_keys = len(compiles)
+    n_compiles = sum(compiles.values())
+    commits = sum(int(svc.telemetry.counters["commits"])
+                  for svc in services)
+
+    where = f"multitenant/{n_tenants}xK4"
+    recompiled = {k: c for k, c in compiles.items() if c > 1}
+    if recompiled:
+        worst = max(recompiled.values())
+        out.append(Finding(
+            rule="serve-retrace", path="serve", where=where,
+            detail=f"{len(recompiled)} geometry key(s) compiled up to "
+                   f"{worst}x across {n_tenants} tenants (per-key "
+                   "compile counts must be exactly 1: one compile per "
+                   "geometry, never one per tenant)",
+            ident="per-tenant-compile"))
+    if n_compiles != n_keys:
+        out.append(Finding(
+            rule="serve-retrace", path="serve", where=where,
+            detail=f"{n_compiles} compile(s) for {n_keys} distinct "
+                   f"geometry key(s) across {n_tenants} tenants: the "
+                   "compile total must equal the number of distinct "
+                   "geometries", ident="compile-total"))
+    if commits < 2 * n_tenants or (not recompiled
+                                   and hits < commits - n_keys):
+        out.append(Finding(
+            rule="serve-retrace", path="serve", where=where,
+            detail=f"{commits} commits across {n_tenants} tenants with "
+                   f"{hits} shared-cache hit(s) (expected >= "
+                   f"{max(commits - n_keys, 0)}): cross-tenant "
+                   "executable sharing was not exercised",
+            ident="no-sharing"))
+    return out
+
+
 def check_all() -> List[Finding]:
     """The jaxpr_audit pass."""
     return (check_engine() + check_donation() + check_scenarios()
-            + check_serve())
+            + check_serve() + check_serve_multitenant())

@@ -12,29 +12,42 @@ long-lived counterpart:
                  staleness window, backpressure)
   service     -- the aggregation loop: buffered cohorts, one compiled
                  launch per cohort geometry (no per-cohort recompile),
-                 staleness-weighted admission, graceful degradation
+                 staleness- and health-weighted admission, circuit
+                 breaker, graceful degradation
+  journal     -- write-ahead journal + snapshots: exactly-once
+                 admission across crash/restart
+  transport   -- concurrent front: bounded per-agent channels with
+                 backpressure verdicts, dispatcher over multiple
+                 tenant services sharing one executable cache
   telemetry   -- latency percentiles, throughput, histograms, recovery
-                 counters
+                 counters, queue depth, deterministic views
   chaos       -- deterministic fault injection (stragglers, dropout,
                  duplicates, stale re-sends, byzantine payloads via the
-                 attack registry, engine launch faults)
+                 attack registry, engine launch faults, partitions,
+                 reordering, payload corruption, slow loris, crash)
   scenario    -- replay a federated ``ScenarioSpec``'s traffic through
-                 the service under a simulated clock
+                 the transport-fronted service under a simulated clock
 
 See docs/serving.md for the buffering policy, the staleness weighting,
-the fault matrix and the degradation ladder.
+the health-score formula, the journal format, the fault matrix and the
+degradation ladder.
 """
 
 from repro.serve.buffer import AgentUpdate, CohortBuffer
-from repro.serve.chaos import CHAOS_PROFILES, ChaosConfig, FaultInjected
+from repro.serve.chaos import (CHAOS_PROFILES, ChaosConfig, FaultInjected,
+                               NetworkModel)
 from repro.serve.clock import SimClock, WallClock
+from repro.serve.journal import Journal, JournalCorrupt
 from repro.serve.retry import RetryError, RetryPolicy
 from repro.serve.scenario import ServeResult, replay
-from repro.serve.service import AggregationService, CommitResult, ServeConfig
+from repro.serve.service import (AggregationService, CommitResult,
+                                 ExecutableCache, ServeConfig)
+from repro.serve.transport import TransportConfig, TransportFront
 
 __all__ = [
     "AgentUpdate", "AggregationService", "CHAOS_PROFILES", "ChaosConfig",
-    "CohortBuffer", "CommitResult", "FaultInjected", "RetryError",
-    "RetryPolicy", "ServeConfig", "ServeResult", "SimClock", "WallClock",
-    "replay",
+    "CohortBuffer", "CommitResult", "ExecutableCache", "FaultInjected",
+    "Journal", "JournalCorrupt", "NetworkModel", "RetryError", "RetryPolicy",
+    "ServeConfig", "ServeResult", "SimClock", "TransportConfig",
+    "TransportFront", "WallClock", "replay",
 ]

@@ -107,6 +107,23 @@ class CohortBuffer:
             del self._pending[p.update.agent_id]
         return taken
 
+    def discard(self, agent_ids) -> None:
+        """Drop pending entries by agent id (recovery applying a
+        journaled commit's consumed cohort); missing ids are fine --
+        the corresponding delivery may have been superseded."""
+        for aid in agent_ids:
+            self._pending.pop(aid, None)
+
+    def export_state(self):
+        """The buffer's durable state: ``(last_seq, pending)`` --
+        exactly what a journal snapshot must capture for the seq gates
+        and in-flight entries to survive a restart."""
+        return dict(self._last_seq), list(self._pending.values())
+
+    def restore_state(self, last_seq, pending) -> None:
+        self._last_seq = {int(k): int(v) for k, v in last_seq.items()}
+        self._pending = {p.update.agent_id: p for p in pending}
+
     def refresh_staleness(self, current_round: int) -> List[Pending]:
         """Re-evaluate pending entries against the window after the
         server round advanced: entries that aged out are evicted and

@@ -1,22 +1,33 @@
 """Replay a federated ScenarioSpec's client traffic through the
-streaming service under chaos.
+transport-fronted streaming service under chaos.
 
 The scenario runner (``repro.scenarios``) answers "does the estimator
 hold up over T synchronous rounds"; this module answers the serving
-question: does the *service* -- buffering, staleness weighting,
-deadlines, retries, degradation -- hold up when the same client
-population talks to it over an unreliable transport?  The spec is the
-single source of truth for the problem (dimension, data heterogeneity,
-local-SGD recipe), so a served run is directly comparable to the
-runner's band for the same spec: ``metrics.breakdown_threshold(spec)``.
+question: does the *service* -- transport front, buffering, staleness
+weighting, deadlines, retries, degradation, journaling -- hold up when
+the same client population talks to it over an unreliable network?
+The spec is the single source of truth for the problem (dimension, data
+heterogeneity, local-SGD recipe), so a served run is directly
+comparable to the runner's band for the same spec:
+``metrics.breakdown_threshold(spec)``.
 
 The replay is a discrete-event simulation on ``SimClock`` -- a heap of
 (send | deliver | tick) events, every random draw from one seeded
 generator, so a chaos run is deterministic given (spec, chaos, serve,
-seed).  Agents send their locally-trained model (the real
-``federated.local_update``, jit-compiled once) tagged with the server
-round it was computed from; the transport delays, duplicates, replays
-and corrupts deliveries per ``ChaosConfig``; the service does the rest.
+seed, tenants).  Traffic flows the production path end to end:
+
+  agent -> NetworkModel (delay / partition / reorder / corrupt /
+  duplicate / trickle) -> TransportFront.offer (bounded per-agent
+  channel, backpressure to the sender) -> pump -> tenant
+  AggregationService.submit (write-ahead journaled) -> kernel commit.
+
+``tenants > 1`` splits the agent population across N concurrent tenant
+services (``agent i -> t{i mod N}``) that share one ``ExecutableCache``
+-- same cohort geometry, one compile total.  ``crash_restart_frac``
+kills a tenant's service object mid-run and restores it from its
+journal via ``AggregationService.recover``; the harness then checks the
+exactly-once invariant directly (no (agent, seq) pair admitted twice
+across the crash -- ``duplicate_admissions``).
 """
 
 from __future__ import annotations
@@ -24,7 +35,7 @@ from __future__ import annotations
 import dataclasses
 import heapq
 import time
-from typing import List, Optional
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -35,30 +46,44 @@ from repro.data import synthetic
 from repro.scenarios import metrics
 from repro.scenarios.spec import ScenarioSpec
 from repro.serve.buffer import AgentUpdate
-from repro.serve.chaos import ChaosConfig, assign_roles, make_launch_fault_hook
+from repro.serve.chaos import (ChaosConfig, NetworkModel, assign_roles,
+                               make_launch_fault_hook)
 from repro.serve.clock import SimClock
+from repro.serve.journal import Journal
 from repro.serve.service import AggregationService, CommitResult, ServeConfig
+from repro.serve.telemetry import ServeTelemetry
+from repro.serve.transport import TransportConfig, TransportFront
 
 _MODEL_COMMITS = ("aggregated", "degraded_partial")
 
 
 @dataclasses.dataclass(frozen=True, eq=False)
 class ServeResult:
-    """One replay outcome (see ``replay``)."""
+    """One replay outcome (see ``replay``).  Single-tenant fields
+    (``msd``, ``commits``, ``model``) are tenant ``t0``'s, so existing
+    single-tenant callers read exactly what they used to; the
+    ``*_by_tenant`` maps carry the full picture."""
 
     spec: ScenarioSpec
     chaos: ChaosConfig
     serve: ServeConfig
-    msd: np.ndarray               # per model-updating commit
-    summary: dict                 # metrics.attack_summary vs. the spec band
-    telemetry: dict               # ServeTelemetry.snapshot
+    msd: np.ndarray               # tenant t0, per model-updating commit
+    summary: dict                 # worst tenant vs. the spec band
+    telemetry: dict               # merged ServeTelemetry.snapshot
     recoveries: dict              # fault mode -> recovery event count
-    commits: List[CommitResult]
-    rounds_completed: int
+    commits: List[CommitResult]   # tenant t0
+    commits_by_tenant: Dict[str, List[CommitResult]]
+    telemetry_by_tenant: Dict[str, dict]
+    journals: Dict[str, Journal]
+    transport: dict               # TransportFront.stats()
+    tenants: int
+    duplicate_admissions: int     # (agent, seq) admitted twice -- MUST be 0
+    crash_restarts: int           # restarts actually performed
+    rounds_completed: int         # min over tenants
     sim_elapsed_s: float
     wall_s: float
     launch_audit: Optional[dict]
-    model: np.ndarray
+    model: np.ndarray             # tenant t0
 
     def to_row(self) -> dict:
         row = {
@@ -67,11 +92,15 @@ class ServeResult:
             "k_min": self.serve.k_min,
             "num_agents": self.spec.num_agents,
             "dim": self.spec.dim,
+            "tenants": int(self.tenants),
             "fault_modes": list(self.chaos.fault_modes()),
             "recoveries": {k: int(v) for k, v in self.recoveries.items()},
+            "duplicate_admissions": int(self.duplicate_admissions),
+            "crash_restarts": int(self.crash_restarts),
             "rounds_completed": int(self.rounds_completed),
             "sim_elapsed_s": round(float(self.sim_elapsed_s), 3),
             "wall_s": round(float(self.wall_s), 3),
+            "transport": dict(self.transport),
         }
         row.update(self.summary)
         row.update(self.telemetry)
@@ -96,18 +125,22 @@ def replay(spec: ScenarioSpec, *,
            serve: ServeConfig = ServeConfig(),
            rounds: Optional[int] = None,
            seed: int = 0,
+           tenants: int = 1,
+           transport: TransportConfig = TransportConfig(),
            send_period_s: float = 1.0,
            base_delay_s: float = 0.05,
            max_events: int = 200_000) -> ServeResult:
-    """Run ``spec``'s client population against a fresh service until
-    ``rounds`` model-updating commits (default ``spec.num_steps``) land.
+    """Run ``spec``'s client population against ``tenants`` fresh
+    tenant services behind one transport front until every tenant lands
+    ``rounds`` model-updating commits (default ``spec.num_steps``).
 
     Only federated specs replay (the service is the fusion center);
     ``spec.participation`` is the per-period send probability.  The
-    returned ``summary`` holds ``metrics.attack_summary`` of the served
-    MSD history against ``metrics.breakdown_threshold(spec)`` -- the
-    same acceptance band the scenario runner uses for this spec, so
-    "the service under chaos tracks the synchronous run" is one boolean
+    returned ``summary`` holds ``metrics.attack_summary`` of the
+    *worst* tenant's MSD history against
+    ``metrics.breakdown_threshold(spec)`` -- the same acceptance band
+    the scenario runner uses for this spec, so "the service under chaos
+    tracks the synchronous run" is one boolean
     (``not summary["broke_down"]``).
     """
     if spec.paradigm != "federated":
@@ -117,6 +150,12 @@ def replay(spec: ScenarioSpec, *,
     target_rounds = int(rounds if rounds is not None else spec.num_steps)
     if target_rounds < 1:
         raise ValueError(f"rounds must be >= 1, got {target_rounds}")
+    if tenants < 1:
+        raise ValueError(f"tenants must be >= 1, got {tenants}")
+    if spec.num_agents // tenants < serve.k_min:
+        raise ValueError(
+            f"{tenants} tenants leave {spec.num_agents // tenants} agents "
+            f"per tenant, below k_min={serve.k_min}")
 
     problem = synthetic.LinearModelProblem(
         dim=spec.dim, noise_var=spec.noise_var, seed=spec.data_seed)
@@ -128,13 +167,26 @@ def replay(spec: ScenarioSpec, *,
 
     rng = np.random.default_rng(seed)
     roles = assign_roles(chaos, spec.num_agents, rng)
+    net = NetworkModel(chaos, roles, rng, horizon_rounds=target_rounds,
+                       base_delay_s=base_delay_s)
     attack_fn = chaos.attack_fn()
     master_key = jax.random.key(spec.seed)
 
     clock = SimClock()
-    service = AggregationService(
-        np.zeros_like(w_star), config=serve, clock=clock, seed=seed,
-        fault_hook=make_launch_fault_hook(chaos, seed=seed + 1))
+    front = TransportFront(clock=clock, config=transport)
+    names = [f"t{i}" for i in range(tenants)]
+    tels = {name: ServeTelemetry() for name in names}
+    journals = {name: Journal.memory(
+        snapshot_every=serve.journal_snapshot_every) for name in names}
+    hooks = {name: make_launch_fault_hook(chaos, seed=seed + 1 + i)
+             for i, name in enumerate(names)}
+    for i, name in enumerate(names):
+        front.add_tenant(name, np.zeros_like(w_star), config=serve,
+                         seed=seed + i, fault_hook=hooks[name],
+                         journal=journals[name], telemetry=tels[name])
+
+    def tenant_of(agent: int) -> str:
+        return names[agent % tenants]
 
     # -- the event heap ----------------------------------------------------
     events: list = []
@@ -148,17 +200,24 @@ def replay(spec: ScenarioSpec, *,
     send_counter = {i: 0 for i in range(spec.num_agents)}
     delivery_seq = {i: 0 for i in range(spec.num_agents)}
     prev_update = {}              # agent -> last (round, payload np) sent
-    crash_round = max(int(chaos.dropout_after_frac * target_rounds), 1)
+    dropout_round = max(int(chaos.dropout_after_frac * target_rounds), 1)
+    crash_rounds = sorted({max(int(f * target_rounds), 1)
+                           for f in chaos.crash_restart_frac})
+    next_crash = {name: 0 for name in names}    # index into crash_rounds
     tick_dt = serve.deadline_s / 4.0
+    held: list = []               # partition-held (agent, upd, flags)
 
     for i in range(spec.num_agents):
         push(float(rng.uniform(0, send_period_s)), "send", i)
     push(tick_dt, "tick")
 
+    def progress() -> int:
+        return max(svc.round for svc in front.tenants.values())
+
     def compute_payload(agent: int, server_round: int) -> np.ndarray:
         k = jax.random.fold_in(
             jax.random.fold_in(master_key, agent), send_counter[agent])
-        phi = update_fn(jnp.asarray(service.model),
+        phi = update_fn(jnp.asarray(front.tenant(tenant_of(agent)).model),
                         jnp.asarray(agent, dtype=jnp.int32), k)
         if agent in roles.byzantine and attack_fn is not None:
             phi = attack_fn(phi[None], jnp.ones((1,), bool),
@@ -170,35 +229,87 @@ def replay(spec: ScenarioSpec, *,
         return delivery_seq[agent]
 
     def schedule_delivery(agent: int, upd: AgentUpdate, now: float):
-        delay = base_delay_s * (0.5 + float(rng.random()))
-        if agent in roles.stragglers:
-            delay += float(rng.exponential(chaos.straggler_delay_s))
-        push(now + delay, "deliver", upd)
-        if float(rng.random()) < chaos.duplicate_prob:
+        plan = net.plan_delivery(agent, upd.payload,
+                                 progress_round=progress())
+        if plan.payload is not None:
+            upd = dataclasses.replace(upd, payload=plan.payload)
+        flags = {"reordered": plan.reordered, "hold_s": plan.hold_s,
+                 "released": False}
+        if plan.held_by_partition:
+            held.append((agent, upd, flags))
+            return
+        push(now + plan.delay_s, "deliver", (agent, upd, flags))
+        if plan.duplicated:
             # transport replay: same sequence number, later arrival
-            push(now + delay * (1.5 + float(rng.random())), "deliver", upd)
+            push(now + plan.delay_s * (1.5 + float(rng.random())),
+                 "deliver", (agent, upd, flags))
+
+    def release_held(now: float):
+        while held:
+            agent, upd, flags = held.pop()
+            flags = dict(flags, released=True)
+            push(now + base_delay_s + net.heal_jitter(),
+                 "deliver", (agent, upd, flags))
 
     # -- the loop ----------------------------------------------------------
-    msd: List[float] = []
-    commits: List[CommitResult] = []
-    commits_after_crash = 0
+    msd: Dict[str, List[float]] = {name: [] for name in names}
+    commits: Dict[str, List[CommitResult]] = {name: [] for name in names}
+    seen_seqs: Dict[str, set] = {name: set() for name in names}
+    duplicate_admissions = 0
+    crash_restarts = 0
+    commits_after_dropout = 0
     byz_cohort_commits = 0
+    released_processed = 0
+    reordered_processed = 0
+    loris_processed = 0
     wall_t0 = time.perf_counter()
     n_events = 0
 
-    def absorb(new_commits: List[CommitResult]):
-        nonlocal commits_after_crash, byz_cohort_commits
-        for c in new_commits:
-            commits.append(c)
-            if c.kind not in _MODEL_COMMITS:
+    def maybe_crash(now: float):
+        """Kill + journal-restore any tenant that crossed its next
+        crash point.  The channels' in-flight entries die with the
+        process; heap deliveries are the network and survive."""
+        nonlocal crash_restarts
+        for name in names:
+            i = next_crash[name]
+            if i >= len(crash_rounds):
                 continue
-            msd.append(float(np.sum((service.model - w_star) ** 2)))
-            if c.round > crash_round:
-                commits_after_crash += 1
-            if any(a in roles.byzantine for a in c.agent_ids):
-                byz_cohort_commits += 1
+            if front.tenant(name).round < crash_rounds[i]:
+                continue
+            next_crash[name] = i + 1
+            recovered = AggregationService.recover(
+                journals[name], config=serve, clock=clock,
+                seed=seed + names.index(name) + 1000 * (i + 1),
+                fault_hook=hooks[name], exec_cache=front.exec_cache,
+                telemetry=tels[name])
+            front.replace_tenant(name, recovered)
+            crash_restarts += 1
 
-    while events and len(msd) < target_rounds and n_events < max_events:
+    def absorb():
+        nonlocal commits_after_dropout, byz_cohort_commits
+        nonlocal duplicate_admissions
+        for name, new_commits in front.drain_commits().items():
+            svc = front.tenant(name)
+            for c in new_commits:
+                commits[name].append(c)
+                for pair in c.seqs:
+                    if pair in seen_seqs[name]:
+                        duplicate_admissions += 1
+                    seen_seqs[name].add(pair)
+                if c.kind not in _MODEL_COMMITS:
+                    continue
+                msd[name].append(
+                    float(np.sum((svc.model - w_star) ** 2)))
+                if c.round > dropout_round:
+                    commits_after_dropout += 1
+                if any(a in roles.byzantine for a in c.agent_ids):
+                    byz_cohort_commits += 1
+        maybe_crash(clock.now())
+
+    def all_done() -> bool:
+        return all(len(msd[name]) >= target_rounds for name in names)
+
+    while events and not all_done() and n_events < max_events:
         t, _, kind, payload = heapq.heappop(events)
         if t > clock.now():
             # the clock can already be past t: retry backoff *sleeps*
@@ -208,16 +319,20 @@ def replay(spec: ScenarioSpec, *,
             clock.advance_to(t)
         n_events += 1
         if kind == "tick":
-            absorb(service.tick())
+            if held and not net.partition_active(progress()):
+                release_held(t)
+            front.pump()
+            absorb()
             push(t + tick_dt, "tick")
         elif kind == "send":
             agent = payload
+            svc_round = front.tenant(tenant_of(agent)).round
             crashed = (agent in roles.dropouts
-                       and service.round >= crash_round)
+                       and svc_round >= dropout_round)
             if not crashed:
                 if float(rng.random()) < spec.participation:
                     send_counter[agent] += 1
-                    r = service.round
+                    r = svc_round
                     phi = compute_payload(agent, r)
                     upd = AgentUpdate(agent_id=agent, round=r, payload=phi,
                                       seq=next_seq(agent), sent_at=t)
@@ -235,44 +350,109 @@ def replay(spec: ScenarioSpec, *,
                      "send", agent)
             # crashed agents schedule nothing: they are gone for good
         elif kind == "deliver":
-            service.submit(payload)
-            absorb(service.drain_commits())
+            agent, upd, flags = payload
+            verdict = front.offer(tenant_of(agent), upd,
+                                  hold_s=flags["hold_s"])
+            if verdict == "enqueued":
+                if flags["released"]:
+                    released_processed += 1
+                if flags["reordered"]:
+                    reordered_processed += 1
+                if flags["hold_s"] > 0:
+                    loris_processed += 1
+            front.pump()
+            absorb()
 
-    absorb(service.drain_commits())
+    if held:
+        release_held(clock.now())
+        while events and n_events < max_events:
+            t, _, kind, payload = heapq.heappop(events)
+            if kind != "deliver":
+                continue
+            if t > clock.now():
+                clock.advance_to(t)
+            n_events += 1
+            agent, upd, flags = payload
+            if front.offer(tenant_of(agent), upd,
+                           hold_s=flags["hold_s"]) == "enqueued" \
+                    and flags["released"]:
+                released_processed += 1
+            front.pump()
+            absorb()
+    front.pump()
+    absorb()
     wall_s = time.perf_counter() - wall_t0
-    msd_arr = np.asarray(msd, dtype=np.float64)
-    level = metrics.breakdown_threshold(spec)
-    summary = (metrics.attack_summary(msd_arr, breakdown_level=level)
-               if msd_arr.size else
-               {"steady_msd": float("inf"), "peak_msd": float("inf"),
-                "breakdown_level": float(level), "broke_down": True})
 
-    tel = service.telemetry
-    counters = tel.counters
-    recoveries = {}
+    # -- per-tenant acceptance vs. the spec band ---------------------------
+    level = metrics.breakdown_threshold(spec)
+
+    def summarize(arr: np.ndarray) -> dict:
+        if arr.size:
+            return metrics.attack_summary(arr, breakdown_level=level)
+        return {"steady_msd": float("inf"), "peak_msd": float("inf"),
+                "breakdown_level": float(level), "broke_down": True}
+
+    msd_arrs = {name: np.asarray(msd[name], dtype=np.float64)
+                for name in names}
+    summaries = {name: summarize(msd_arrs[name]) for name in names}
+    worst = max(names, key=lambda n: (summaries[n]["broke_down"],
+                                      summaries[n]["steady_msd"]))
+    summary = dict(summaries[worst])
+    summary["worst_tenant"] = worst
+    summary["tenants_broke_down"] = sum(
+        1 for s in summaries.values() if s["broke_down"])
+
+    # -- recovery accounting (merged across tenants) -----------------------
+    merged = ServeTelemetry.merged(tels.values())
+    merged.record_queue_depth(front.queue_depth_max,
+                              front.config.channel_capacity)
+    counters = merged.counters
     for mode in chaos.fault_modes():
         if mode == "straggler":
-            recoveries[mode] = (counters["stale_downweighted"]
-                                + counters["deadline_fired"])
+            merged.record_recovery(mode, counters["stale_downweighted"]
+                                   + counters["deadline_fired"])
         elif mode == "dropout":
-            recoveries[mode] = commits_after_crash
+            merged.record_recovery(mode, commits_after_dropout)
         elif mode == "duplicate":
-            recoveries[mode] = counters["submit_duplicate"]
+            merged.record_recovery(mode, counters["submit_duplicate"])
         elif mode == "stale":
-            recoveries[mode] = (counters["submit_rejected_stale"]
-                                + counters["stale_downweighted"])
+            merged.record_recovery(mode, counters["submit_rejected_stale"]
+                                   + counters["stale_downweighted"])
         elif mode == "byzantine":
-            recoveries[mode] = byz_cohort_commits
+            merged.record_recovery(mode, byz_cohort_commits)
         elif mode == "launch_fault":
-            recoveries[mode] = (counters["launch_recovered"]
-                                + counters["launch_failed"])
+            merged.record_recovery(mode, counters["launch_recovered"]
+                                   + counters["launch_failed"])
+        elif mode == "partition":
+            merged.record_recovery(mode, released_processed)
+        elif mode == "reorder":
+            merged.record_recovery(mode, reordered_processed)
+        elif mode == "corrupt":
+            merged.record_recovery(
+                mode, counters["submit_rejected_invalid"])
+        elif mode == "slow_loris":
+            merged.record_recovery(
+                mode, loris_processed
+                + int(front.counters["backpressure"]))
+        elif mode == "crash":
+            merged.record_recovery(mode, counters["journal_recoveries"])
+    recoveries = {k: int(v) for k, v in sorted(merged.recoveries.items())}
 
+    t0_svc = front.tenant(names[0])
     return ServeResult(
         spec=spec, chaos=chaos, serve=serve,
-        msd=msd_arr, summary=summary,
-        telemetry=tel.snapshot(elapsed_s=wall_s),
-        recoveries=recoveries, commits=commits,
-        rounds_completed=len(msd),
+        msd=msd_arrs[names[0]], summary=summary,
+        telemetry=merged.snapshot(elapsed_s=wall_s),
+        recoveries=recoveries,
+        commits=commits[names[0]],
+        commits_by_tenant=dict(commits),
+        telemetry_by_tenant={n: tels[n].snapshot() for n in names},
+        journals=dict(journals),
+        transport=front.stats(),
+        tenants=tenants,
+        duplicate_admissions=duplicate_admissions,
+        crash_restarts=crash_restarts,
+        rounds_completed=min(len(msd[name]) for name in names),
         sim_elapsed_s=clock.now(), wall_s=wall_s,
-        launch_audit=service.launch_audit(),
-        model=service.model)
+        launch_audit=t0_svc.launch_audit(),
+        model=t0_svc.model)

@@ -283,7 +283,10 @@ def test_chaos_fault_modes():
     assert schaos.ChaosConfig().fault_modes() == ()
     assert set(schaos.CHAOS_PROFILES["mixed"].fault_modes()) == {
         "straggler", "dropout", "duplicate", "stale", "byzantine",
-        "launch_fault"}
+        "launch_fault", "partition", "reorder", "corrupt", "slow_loris",
+        "crash"}
+    assert set(schaos.CHAOS_PROFILES["network"].fault_modes()) == {
+        "partition", "reorder", "corrupt", "slow_loris"}
 
 
 def _replay_spec(rounds, name="serve-test"):
@@ -346,11 +349,14 @@ def _good_serve_rows():
         "steady_msd": 0.003, "breakdown_level": 0.1, "broke_down": False,
         "latency_p50": 0.2, "latency_p95": 0.5, "latency_p99": 0.6,
         "updates_per_sec": 100.0, "post_warmup_cache_hit": True,
-        "post_warmup_misses": 0,
+        "post_warmup_misses": 0, "tenants": 1,
+        "queue_depth_max": 3, "channel_capacity": 16,
+        "duplicate_admissions": 0, "crash_restarts": 0,
     }
-    chaosrow = dict(base, profile="mixed",
-                    fault_modes=["byzantine", "duplicate"],
-                    recoveries={"byzantine": 5, "duplicate": 3})
+    chaosrow = dict(base, profile="mixed", tenants=2, crash_restarts=1,
+                    fault_modes=["byzantine", "duplicate", "crash"],
+                    recoveries={"byzantine": 5, "duplicate": 3,
+                                "crash": 1})
     return [base, chaosrow]
 
 
@@ -366,6 +372,15 @@ def test_bench_audit_serve_passes_good_rows():
     (lambda rows: rows[1]["recoveries"].update(byzantine=0), "no recovery"),
     (lambda rows: rows.pop(1), "no chaos profile"),
     (lambda rows: rows.pop(0), "no clean"),
+    (lambda rows: rows[0].update(queue_depth_max=999), "unbounded queue"),
+    (lambda rows: rows[0].pop("queue_depth_max"), "queue-depth"),
+    (lambda rows: rows[0].pop("channel_capacity"), "capacity bound"),
+    (lambda rows: rows[1].update(duplicate_admissions=2),
+     "duplicate admission"),
+    (lambda rows: rows[1]["fault_modes"].remove("crash"),
+     "no crash-restart"),
+    (lambda rows: rows[1]["recoveries"].update(crash=0), "crash"),
+    (lambda rows: rows[1].update(tenants=1), "multi-tenant"),
 ])
 def test_bench_audit_serve_catches_mutations(mutate, needle):
     rows = _good_serve_rows()

@@ -1,0 +1,260 @@
+"""Write-ahead journal + crash recovery: record format, torn-tail
+tolerance, snapshot cadence, exactly-once admission across restart, and
+the chaos-replay determinism regression (bit-identical journals)."""
+
+import numpy as np
+import pytest
+
+from repro.scenarios.spec import ScenarioSpec
+from repro.serve import chaos as schaos
+from repro.serve import journal as sjournal
+from repro.serve import scenario as sscenario
+from repro.serve import service as ssvc
+from repro.serve.buffer import AgentUpdate
+from repro.serve.clock import SimClock
+from repro.serve.telemetry import deterministic_view
+
+DIM = 6
+
+
+def upd(agent, *, round=0, seq=1, value=1.0):
+    return AgentUpdate(agent_id=agent, round=round,
+                       payload=np.full(DIM, value, np.float32), seq=seq)
+
+
+def make_service(journal=None, **cfg_kw):
+    defaults = dict(k_min=4, quorum=2, deadline_s=1.0, backend="jnp")
+    defaults.update(cfg_kw)
+    clock = SimClock()
+    svc = ssvc.AggregationService(
+        np.zeros(DIM, np.float32), config=ssvc.ServeConfig(**defaults),
+        clock=clock, journal=journal)
+    return svc, clock
+
+
+# ===========================================================================
+# record format
+# ===========================================================================
+
+def test_array_codec_roundtrip():
+    x = np.arange(7, dtype=np.float32) * 0.5
+    np.testing.assert_array_equal(
+        sjournal.decode_array(sjournal.encode_array(x)), x)
+
+
+def test_append_records_roundtrip():
+    j = sjournal.Journal.memory()
+    j.append("init", {"model": "x", "round": 0})
+    j.append("delivery", {"agent": 3, "seq": 1})
+    got = list(j.records())
+    assert got == [("init", {"model": "x", "round": 0}),
+                   ("delivery", {"agent": 3, "seq": 1})]
+
+
+def test_torn_tail_is_dropped_not_fatal():
+    j = sjournal.Journal.memory()
+    j.append("init", {"round": 0})
+    j.append("delivery", {"agent": 1})
+    # the crash lands mid-write: the final line has no newline and a
+    # truncated body
+    j._backend._buf.write(b"deadbeef {\"t\":\"deliv")
+    assert [k for k, _ in j.records()] == ["init", "delivery"]
+    with pytest.raises(sjournal.JournalCorrupt):
+        list(j.records(strict_tail=True))
+
+
+def test_mid_file_corruption_raises():
+    j = sjournal.Journal.memory()
+    j.append("init", {"round": 0})
+    j.append("delivery", {"agent": 1})
+    raw = bytearray(j.dump())
+    # flip a byte inside the FIRST record's body
+    raw[20] ^= 0xFF
+    j2 = sjournal.Journal.memory()
+    j2._backend._buf.write(bytes(raw))
+    with pytest.raises(sjournal.JournalCorrupt):
+        list(j2.records())
+
+
+def test_unknown_record_kind_rejected():
+    j = sjournal.Journal.memory()
+    with pytest.raises(ValueError, match="unknown record kind"):
+        j.append("bogus", {})
+
+
+def test_file_backend_roundtrip(tmp_path):
+    path = tmp_path / "svc.journal"
+    j = sjournal.Journal.file(path)
+    j.append("init", {"round": 0})
+    j.append("commit", {"round": 1})
+    j2 = sjournal.Journal.file(path)
+    assert [k for k, _ in j2.records()] == ["init", "commit"]
+    assert j2.dump() == j.dump()
+
+
+def test_snapshot_cadence():
+    j = sjournal.Journal.memory(snapshot_every=2)
+    j.append("commit", {"n": 1})
+    assert not j.snapshot_due()
+    j.append("commit", {"n": 2})
+    assert j.snapshot_due()
+    j.append("snapshot", {"n": 2})
+    assert not j.snapshot_due()
+
+
+# ===========================================================================
+# service-level recovery
+# ===========================================================================
+
+def fill_cohort(svc, *, seq, value=0.5):
+    for agent in range(svc.config.k_min):
+        svc.submit(upd(agent, round=svc.round, seq=seq, value=value))
+
+
+def test_attach_refuses_used_journal():
+    j = sjournal.Journal.memory()
+    j.append("init", {"model": sjournal.encode_array(np.zeros(DIM)),
+                      "round": 0})
+    with pytest.raises(ValueError, match="recover"):
+        make_service(journal=j)
+
+
+def test_recovery_restores_model_round_and_gates():
+    j = sjournal.Journal.memory()
+    svc, _ = make_service(journal=j)
+    fill_cohort(svc, seq=1, value=0.5)
+    fill_cohort(svc, seq=2, value=0.7)
+    model, rnd = svc.model, svc.round
+    del svc                                    # the crash
+
+    rec = ssvc.AggregationService.recover(
+        j, config=ssvc.ServeConfig(k_min=4, backend="jnp"),
+        clock=SimClock())
+    assert rec.round == rnd
+    np.testing.assert_array_equal(rec.model, model)
+    # the transport re-delivers everything: every pair is seq-gated
+    for agent in range(4):
+        for seq in (1, 2):
+            assert rec.submit(upd(agent, round=0, seq=seq)) == "duplicate"
+    assert rec.drain_commits() == []
+
+
+def test_exactly_once_across_crash_mid_cohort():
+    """Crash lands after k_min - 1 deliveries: the pending entries are
+    journaled write-ahead, recovery replays them through the live gate,
+    and the cohort aggregates exactly once."""
+    j = sjournal.Journal.memory()
+    svc, _ = make_service(journal=j)
+    fill_cohort(svc, seq=1, value=0.5)         # round 1 committed
+    for agent in range(3):
+        svc.submit(upd(agent, round=svc.round, seq=2, value=0.9))
+    del svc
+
+    rec = ssvc.AggregationService.recover(
+        j, config=ssvc.ServeConfig(k_min=4, backend="jnp"),
+        clock=SimClock())
+    assert rec.round == 1
+    # re-delivery of the in-flight three: all duplicates
+    for agent in range(3):
+        assert rec.submit(upd(agent, round=1, seq=2, value=0.9)) \
+            == "duplicate"
+    # the fourth member arrives: the cohort completes ONCE
+    rec.submit(upd(3, round=1, seq=2, value=0.9))
+    (c,) = rec.drain_commits()
+    assert c.kind == "aggregated" and c.cohort_size == 4
+    seqs = [p for cc in [c] for p in cc.seqs]
+    assert len(seqs) == len(set(seqs))
+    np.testing.assert_allclose(rec.model, 0.9, rtol=1e-4)
+
+
+def test_recovery_from_snapshot_equals_tail_replay():
+    cfg = dict(k_min=4, backend="jnp")
+    j_snap = sjournal.Journal.memory(snapshot_every=1)
+    j_tail = sjournal.Journal.memory(snapshot_every=10_000)
+    svc_a, _ = make_service(journal=j_snap,
+                            journal_snapshot_every=1, **cfg)
+    svc_b, _ = make_service(journal=j_tail,
+                            journal_snapshot_every=10_000, **cfg)
+    for svc in (svc_a, svc_b):
+        fill_cohort(svc, seq=1, value=0.5)
+        fill_cohort(svc, seq=2, value=0.7)
+        svc.submit(upd(0, round=svc.round, seq=3, value=0.9))
+    del svc_a, svc_b
+
+    rec_snap = ssvc.AggregationService.recover(
+        j_snap, config=ssvc.ServeConfig(**cfg), clock=SimClock())
+    rec_tail = ssvc.AggregationService.recover(
+        j_tail, config=ssvc.ServeConfig(**cfg), clock=SimClock())
+    np.testing.assert_array_equal(rec_snap.model, rec_tail.model)
+    assert rec_snap.round == rec_tail.round
+    assert rec_snap.buffer.export_state()[0] \
+        == rec_tail.buffer.export_state()[0]
+    assert len(rec_snap.buffer) == len(rec_tail.buffer) == 1
+
+
+def test_recovery_preserves_health_state():
+    j = sjournal.Journal.memory()
+    svc, _ = make_service(journal=j, quarantine_threshold=2,
+                          max_staleness=0)
+    fill_cohort(svc, seq=1, value=0.5)
+    # two stale rejections trip agent 9's breaker
+    for seq in (2, 3):
+        svc.submit(upd(9, round=0, seq=seq))
+    assert svc.health_of(9).quarantined_until > svc.round
+    quarantined_until = svc.health_of(9).quarantined_until
+    score = svc.health_of(9).score
+    del svc
+
+    rec = ssvc.AggregationService.recover(
+        j, config=ssvc.ServeConfig(k_min=4, backend="jnp",
+                                   quarantine_threshold=2,
+                                   max_staleness=0),
+        clock=SimClock())
+    assert rec.health_of(9).quarantined_until == quarantined_until
+    assert rec.health_of(9).score == pytest.approx(score)
+    assert rec.submit(upd(9, round=rec.round, seq=4)) \
+        == "rejected_quarantined"
+
+
+# ===========================================================================
+# determinism regression: chaos replay -> bit-identical journals
+# ===========================================================================
+
+def test_chaos_replay_is_bit_deterministic():
+    spec = ScenarioSpec(name="det", paradigm="federated", num_agents=16,
+                        dim=8, num_steps=8, step_size=0.05, local_steps=2)
+    kw = dict(chaos=schaos.CHAOS_PROFILES["mixed"],
+              serve=ssvc.ServeConfig(k_min=8, deadline_s=1.0,
+                                     backend="jnp"),
+              rounds=8, seed=11, tenants=2)
+    r1 = sscenario.replay(spec, **kw)
+    r2 = sscenario.replay(spec, **kw)
+    # the journals are byte-for-byte identical...
+    for name in r1.journals:
+        assert r1.journals[name].dump() == r2.journals[name].dump()
+    # ...and so is every deterministic telemetry field
+    assert deterministic_view(r1.telemetry) == deterministic_view(
+        r2.telemetry)
+    assert r1.recoveries == r2.recoveries
+    assert r1.transport == r2.transport
+    np.testing.assert_array_equal(r1.msd, r2.msd)
+    # no wall-clock value may leak into a journal record
+    for name, j in r1.journals.items():
+        for kind, rec in j.records():
+            assert "wall" not in rec, (name, kind, rec)
+
+
+def test_crash_replay_has_no_duplicate_admissions():
+    spec = ScenarioSpec(name="crash", paradigm="federated", num_agents=16,
+                        dim=8, num_steps=10, step_size=0.05, local_steps=2)
+    res = sscenario.replay(
+        spec,
+        chaos=schaos.ChaosConfig(duplicate_prob=0.2,
+                                 crash_restart_frac=(0.4, 0.7)),
+        serve=ssvc.ServeConfig(k_min=8, deadline_s=1.0, backend="jnp"),
+        rounds=10, seed=5)
+    assert res.crash_restarts == 2
+    assert res.duplicate_admissions == 0
+    assert res.recoveries["crash"] == 2
+    assert res.rounds_completed == 10
+    assert not res.summary["broke_down"]

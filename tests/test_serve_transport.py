@@ -1,0 +1,305 @@
+"""Transport front: bounded channels + backpressure, slow-loris
+head-of-line confinement, deterministic pump order, multi-tenant
+executable sharing (and its jaxpr-audit mutation fixture), health-gated
+admission, and the network-chaos planner."""
+
+import asyncio
+
+import numpy as np
+import pytest
+
+from repro.analysis import jaxpr_audit
+from repro.serve import chaos as schaos
+from repro.serve import service as ssvc
+from repro.serve import transport as stransport
+from repro.serve.buffer import AgentUpdate
+from repro.serve.clock import SimClock
+
+DIM = 6
+
+
+def upd(agent, *, round=0, seq=1, value=1.0, payload=None):
+    if payload is None:
+        payload = np.full(DIM, value, np.float32)
+    return AgentUpdate(agent_id=agent, round=round, payload=payload,
+                       seq=seq)
+
+
+def make_front(tenants=1, *, capacity=3, **cfg_kw):
+    defaults = dict(k_min=4, quorum=2, deadline_s=1.0, backend="jnp")
+    defaults.update(cfg_kw)
+    clock = SimClock()
+    front = stransport.TransportFront(
+        clock=clock,
+        config=stransport.TransportConfig(channel_capacity=capacity))
+    for i in range(tenants):
+        front.add_tenant(f"t{i}", np.zeros(DIM, np.float32),
+                         config=ssvc.ServeConfig(**defaults))
+    return front, clock
+
+
+# ===========================================================================
+# channels + backpressure
+# ===========================================================================
+
+def test_offer_backpressure_at_capacity():
+    front, _ = make_front(capacity=2)
+    # hold the lane: entries are not ready, so they pile up
+    assert front.offer("t0", upd(0, seq=1), hold_s=10.0) == "enqueued"
+    assert front.offer("t0", upd(0, seq=2), hold_s=10.0) == "enqueued"
+    assert front.offer("t0", upd(0, seq=3), hold_s=10.0) == "backpressure"
+    # ...but another agent's lane is untouched
+    assert front.offer("t0", upd(1, seq=1)) == "enqueued"
+    assert front.stats()["backpressure_total"] == 1
+    assert front.queue_depth_max <= 2
+
+
+def test_queue_depth_bounded_by_capacity():
+    front, _ = make_front(capacity=3)
+    for seq in range(1, 10):
+        front.offer("t0", upd(0, seq=seq), hold_s=60.0)
+    assert front.queue_depth_max <= 3
+    assert front.stats()["queue_depth_max"] <= \
+        front.config.channel_capacity
+
+
+def test_unknown_tenant_is_an_error():
+    front, _ = make_front()
+    with pytest.raises(KeyError):
+        front.offer("nope", upd(0))
+    with pytest.raises(ValueError, match="already exists"):
+        front.add_tenant("t0", np.zeros(DIM, np.float32))
+
+
+def test_loris_hold_blocks_only_its_own_lane():
+    front, clock = make_front()
+    front.offer("t0", upd(0, seq=1), hold_s=50.0)     # the loris
+    for agent in range(1, 5):
+        front.offer("t0", upd(agent, seq=1, value=0.5))
+    receipts = front.pump()
+    # the four clean lanes drained; the loris head did not
+    assert sorted(r.agent_id for r in receipts) == [1, 2, 3, 4]
+    assert front.queue_depth() == 1
+    # once its hold elapses it drains too
+    clock.advance_to(60.0)
+    (r,) = front.pump()
+    assert r.agent_id == 0 and r.waited_s >= 50.0
+
+
+def test_pump_drains_globally_oldest_first():
+    front, clock = make_front(tenants=2)
+    clock.advance_to(1.0)
+    front.offer("t1", upd(7, seq=1))
+    clock.advance_to(2.0)
+    front.offer("t0", upd(3, seq=1))
+    receipts = front.pump()
+    assert [(r.tenant, r.agent_id) for r in receipts] == [
+        ("t1", 7), ("t0", 3)]
+
+
+def test_receipts_surface_admission_verdicts():
+    front, _ = make_front()
+    front.offer("t0", upd(0, seq=1))
+    front.offer("t0", upd(0, seq=1))      # replayed delivery
+    verdicts = [r.verdict for r in front.pump()]
+    assert verdicts == ["buffered", "duplicate"]
+
+
+def test_replace_tenant_clears_in_flight_channels():
+    front, _ = make_front(tenants=2)
+    front.offer("t0", upd(0, seq=1), hold_s=10.0)
+    front.offer("t1", upd(1, seq=1), hold_s=10.0)
+    svc2 = ssvc.AggregationService(
+        np.zeros(DIM, np.float32),
+        config=ssvc.ServeConfig(k_min=4, backend="jnp"),
+        clock=front.clock)
+    lost = front.replace_tenant("t0", svc2)
+    assert lost == 1
+    assert front.tenant("t0") is svc2
+    assert front.queue_depth() == 1       # t1's entry survived
+
+
+def test_run_async_pumps():
+    front, _ = make_front()
+    for agent in range(4):
+        front.offer("t0", upd(agent, seq=1, value=0.5))
+    n = asyncio.run(front.run_async(interval_s=0.001, max_pumps=2))
+    assert n == 2
+    assert front.tenant("t0").round == 1
+
+
+# ===========================================================================
+# multi-tenant executable sharing + the jaxpr audit fixture
+# ===========================================================================
+
+def run_cohorts(front, tenants, cohorts=2):
+    seq = 0
+    for _ in range(cohorts):
+        for i in range(tenants):
+            for agent in range(4):
+                seq += 1
+                front.offer(f"t{i}", upd(
+                    agent, round=front.tenant(f"t{i}").round, seq=seq,
+                    value=0.5))
+            front.pump()
+
+
+def test_two_tenants_share_one_compile():
+    front, _ = make_front(tenants=2)
+    run_cohorts(front, 2)
+    stats = front.exec_cache.stats()
+    assert stats["exec_cache_keys"] == 1
+    assert stats["exec_cache_compiles"] == 1          # once, not per tenant
+    assert stats["exec_cache_max_compiles_per_key"] == 1
+    assert stats["exec_cache_hits"] >= 3
+    for i in range(2):
+        assert front.tenant(f"t{i}").round == 2
+        assert front.tenant(f"t{i}").telemetry.post_warmup_misses == 0
+
+
+def test_jaxpr_multitenant_accepts_shared_cache():
+    front, _ = make_front(tenants=3)
+    run_cohorts(front, 3)
+    assert [f for f in jaxpr_audit.check_serve_multitenant(front=front)
+            if f.rule == "serve-retrace"] == []
+
+
+def test_jaxpr_multitenant_catches_per_tenant_caches():
+    """The mutation: each tenant quietly owns a private cache -- the
+    same geometry key compiles once per tenant, and the auditor must
+    flag it."""
+    front, _ = make_front(tenants=3)
+    for svc in front.tenants.values():
+        svc.exec_cache = ssvc.ExecutableCache()   # sever the sharing
+    run_cohorts(front, 3)
+    findings = jaxpr_audit.check_serve_multitenant(front=front)
+    assert any(f.ident == "per-tenant-compile" for f in findings), findings
+
+
+def test_jaxpr_multitenant_default_session_passes():
+    assert [f for f in jaxpr_audit.check_serve_multitenant()
+            if f.rule == "serve-retrace"] == []
+
+
+# ===========================================================================
+# health-gated admission + circuit breaker
+# ===========================================================================
+
+def make_service(**cfg_kw):
+    defaults = dict(k_min=4, quorum=2, deadline_s=1.0, backend="jnp")
+    defaults.update(cfg_kw)
+    clock = SimClock()
+    svc = ssvc.AggregationService(
+        np.zeros(DIM, np.float32), config=ssvc.ServeConfig(**defaults),
+        clock=clock)
+    return svc, clock
+
+
+def test_rejections_decay_health_and_trip_the_breaker():
+    svc, _ = make_service(quarantine_threshold=3, max_staleness=0)
+    bad = np.full(DIM, np.nan, np.float32)
+    for seq in (1, 2):
+        assert svc.submit(upd(9, seq=seq, payload=bad)) \
+            == "rejected_invalid"
+    h = svc.health_of(9)
+    assert h.score == pytest.approx(0.75 ** 2)
+    assert h.quarantined_until < 0                    # not tripped yet
+    svc.submit(upd(9, seq=3, payload=bad))            # third strike
+    assert svc.health_of(9).quarantined_until == \
+        svc.round + svc.config.quarantine_rounds
+    assert svc.telemetry.counters["quarantined"] == 1
+    # the door now rejects without touching the buffer
+    assert svc.submit(upd(9, seq=4, value=0.5)) == "rejected_quarantined"
+
+
+def test_quarantine_expires_half_open():
+    svc, _ = make_service(quarantine_threshold=1, quarantine_rounds=2,
+                          max_staleness=0)
+    svc.submit(upd(9, seq=1, payload=np.full(DIM, np.inf, np.float32)))
+    assert svc.submit(upd(9, seq=2, value=0.5)) == "rejected_quarantined"
+    # two committed rounds later the agent re-enters (at decayed weight)
+    for seq in (1, 2):
+        for agent in range(4):
+            svc.submit(upd(agent, round=svc.round, seq=seq, value=0.5))
+    assert svc.round == 2
+    assert svc.submit(upd(9, round=svc.round, seq=3, value=0.5)) \
+        == "buffered"
+    assert svc.health_of(9).score < 1.0
+
+
+def test_health_factor_composes_into_cohort_weights():
+    cfg = ssvc.ServeConfig(health_floor=0.1, staleness_alpha=0.5)
+    entries = [
+        ssvc.Pending(update=upd(0), arrival_t=0.0, staleness=0),
+        ssvc.Pending(update=upd(1), arrival_t=0.1, staleness=0),
+    ]
+    _, a = ssvc.assemble_cohort(
+        entries, cfg, health_factors={1: cfg.health_weight(0.5)})
+    assert a[0] == pytest.approx(1.0)
+    assert a[1] == pytest.approx(0.1 + 0.9 * 0.5)
+
+
+def test_estimator_outliers_lose_health_honest_agents_recover():
+    svc, _ = make_service(k_min=8, residual_z=4.0)
+    for agent in range(7):
+        svc.submit(upd(agent, seq=1, value=0.5))
+    svc.submit(upd(7, seq=1, value=500.0))            # the outlier
+    (c,) = svc.drain_commits()
+    assert c.kind == "aggregated"
+    assert c.outliers == (7,)
+    assert svc.health_of(7).score < 1.0
+    assert svc.health_of(0).score == pytest.approx(1.0)
+    assert svc.telemetry.counters["estimator_outliers"] == 1
+
+
+def test_health_gate_off_disables_everything():
+    svc, _ = make_service(health_gate=False, quarantine_threshold=1,
+                          max_staleness=0)
+    bad = np.full(DIM, np.nan, np.float32)
+    svc.submit(upd(9, seq=1, payload=bad))
+    assert svc.submit(upd(9, seq=2, value=0.5)) == "buffered"
+    assert svc.health_of(9).score == 1.0
+
+
+# ===========================================================================
+# network chaos planner
+# ===========================================================================
+
+def test_corrupt_payload_is_nonfinite():
+    rng = np.random.default_rng(0)
+    out = schaos.corrupt_payload(np.zeros(16, np.float32), rng)
+    assert not np.isfinite(out).all()
+
+
+def test_network_model_partition_window():
+    cfg = schaos.ChaosConfig(partition_frac=0.5, partition_start_frac=0.2,
+                             partition_end_frac=0.6)
+    roles = schaos.AgentRoles(partitioned=(0,))
+    net = schaos.NetworkModel(cfg, roles, np.random.default_rng(0),
+                              horizon_rounds=10, base_delay_s=0.05)
+    assert not net.partition_active(1)
+    assert net.partition_active(3)
+    assert not net.partition_active(6)
+    plan = net.plan_delivery(0, np.zeros(4, np.float32), progress_round=3)
+    assert plan.held_by_partition
+    plan = net.plan_delivery(0, np.zeros(4, np.float32), progress_round=7)
+    assert not plan.held_by_partition
+
+
+def test_network_model_corrupt_lands_in_invalid_path():
+    cfg = schaos.ChaosConfig(corrupt_prob=1.0)
+    net = schaos.NetworkModel(cfg, schaos.AgentRoles(),
+                              np.random.default_rng(0),
+                              horizon_rounds=10, base_delay_s=0.05)
+    plan = net.plan_delivery(0, np.zeros(DIM, np.float32),
+                             progress_round=0)
+    assert plan.corrupted and plan.payload is not None
+    svc, _ = make_service()
+    assert svc.submit(upd(0, payload=plan.payload)) == "rejected_invalid"
+
+
+def test_crash_frac_validation():
+    with pytest.raises(ValueError, match="sorted ascending"):
+        schaos.ChaosConfig(crash_restart_frac=(0.7, 0.3))
+    with pytest.raises(ValueError, match=r"in \(0, 1\)"):
+        schaos.ChaosConfig(crash_restart_frac=(1.5,))
